@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks.
+
+This container has no TPU: Pallas runs in interpret mode, so wall-times here
+are CORRECTNESS-path timings, not TPU performance (the roofline report covers
+perf).  What this bench contributes: (a) per-kernel us/call of the jnp
+REFERENCE path at serving-relevant shapes — the number the AWRP eviction adds
+to a decode step on the host path; (b) the analytic FLOPs/bytes per call used
+in §Roofline; (c) allclose re-verification at bench shapes."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else fn(
+        *args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(out_lines=None):
+    print("== kernel bench (jnp reference path on CPU; Pallas validated in "
+          "interpret mode by tests/test_kernels.py) ==")
+    key = jax.random.PRNGKey(0)
+
+    # awrp_select at the long_500k pool shape (B=1, P=256) and batched decode
+    for B, P in ((1, 256), (128, 256)):
+        f = jax.random.randint(key, (B, P), 1, 50)
+        r = jax.random.randint(key, (B, P), 0, 100)
+        clock = jnp.full((B,), 200, jnp.int32)
+        valid = jnp.ones((B, P), jnp.int32)
+        pinned = jnp.zeros((B, P), jnp.int32)
+        fn = jax.jit(ref.ref_awrp_select)
+        us = _time(fn, f, r, clock, valid, pinned)
+        print(f"awrp_select B={B} P={P}: {us:.1f} us/call "
+              f"({B * P * 3} VPU ops)")
+        if out_lines is not None:
+            out_lines.append(f"awrp_select_B{B}_P{P},{us:.1f},us_per_call")
+
+    # paged attention at the bounded long-context shape
+    B, P, page, KVH, G, hd = 1, 64, 64, 16, 2, 128
+    q = jax.random.normal(key, (B, KVH, G, hd), jnp.float32)
+    kp = jax.random.normal(key, (B, P, page, KVH, hd), jnp.float32) * 0.3
+    vp = jax.random.normal(key, (B, P, page, KVH, hd), jnp.float32) * 0.3
+    ps = jnp.asarray(np.arange(P, dtype=np.int32)[None] * page)
+    cur = jnp.asarray([P * page - 1], jnp.int32)
+    fn = jax.jit(ref.ref_paged_attention)
+    us = _time(fn, q, kp, vp, ps, cur)
+    flops = 2 * 2 * KVH * G * hd * P * page
+    print(f"paged_attention pool={P}x{page} KVH={KVH} G={G}: {us:.1f} us/call "
+          f"({flops/1e6:.1f} MFLOP => {flops/(us*1e-6)/1e9:.1f} GFLOP/s host)")
+    if out_lines is not None:
+        out_lines.append(f"paged_attention_{P}x{page},{us:.1f},us_per_call")
+
+    # flash attention tile at train shape
+    B, S, KVH, G, hd = 1, 1024, 4, 2, 128
+    q5 = jax.random.normal(key, (B, S, KVH, G, hd), jnp.float32)
+    k4 = jax.random.normal(key, (B, S, KVH, hd), jnp.float32) * 0.3
+    v4 = jax.random.normal(key, (B, S, KVH, hd), jnp.float32) * 0.3
+    fn = jax.jit(lambda a, b, c: ref.ref_flash_attention(a, b, c, causal=True))
+    us = _time(fn, q5, k4, v4, iters=5)
+    flops = 2 * 2 * KVH * G * hd * S * S / 2
+    print(f"flash_attention S={S}: {us:.1f} us/call "
+          f"({flops/1e9:.2f} GFLOP causal)")
+    if out_lines is not None:
+        out_lines.append(f"flash_attention_S{S},{us:.1f},us_per_call")
+
+
+if __name__ == "__main__":
+    run()

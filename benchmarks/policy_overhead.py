@@ -1,0 +1,62 @@
+"""Policy overhead: µs/access host-side (the paper's 'low overhead' claim —
+AWRP's lazy weights vs WRP's eager recompute) and device throughput of the
+vectorized policies (lax.scan over a trace)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_policy
+from repro.core.jax_policies import JAX_POLICIES, simulate_trace
+from repro.core.traces import trace_zipf
+
+TRACE = trace_zipf(20_000, 2_000, 0.9, seed=5)
+CAP = 512
+
+
+def host_us_per_access(policy: str, trace, cap) -> float:
+    p = make_policy(policy, cap)
+    if hasattr(p, "prepare"):
+        p.prepare(trace)
+    t0 = time.perf_counter()
+    for b in trace:
+        p.access(int(b))
+    return (time.perf_counter() - t0) / len(trace) * 1e6
+
+
+def device_us_per_access(policy: str, trace, cap) -> float:
+    tr = jnp.asarray(trace)
+    h = simulate_trace(tr, cap, policy=policy)
+    h.block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        simulate_trace(tr, cap, policy=policy).block_until_ready()
+    return (time.perf_counter() - t0) / 3 / len(trace) * 1e6
+
+
+def run(out_lines=None):
+    print("== policy overhead ==")
+    print(f"{'policy':>8} | host us/access | device us/access (lax.scan)")
+    for pol in ("awrp", "wrp", "lru", "fifo", "lfu", "arc", "car", "2q"):
+        host = host_us_per_access(pol, TRACE, CAP)
+        dev = (device_us_per_access(pol, TRACE, CAP)
+               if pol in JAX_POLICIES else float("nan"))
+        print(f"{pol:>8} | {host:14.2f} | {dev:14.2f}")
+        if out_lines is not None:
+            out_lines.append(f"policy_host_{pol},{host:.2f},us_per_access")
+            if pol in JAX_POLICIES:
+                out_lines.append(f"policy_device_{pol},{dev:.2f},us_per_access")
+    # the paper's overhead claim: AWRP (lazy) cheaper than WRP (eager)
+    a = host_us_per_access("awrp", TRACE, CAP)
+    w = host_us_per_access("wrp", TRACE, CAP)
+    print(f"AWRP lazy-weight speedup over WRP: {w / a:.2f}x")
+    if out_lines is not None:
+        out_lines.append(f"awrp_vs_wrp_speedup,{a:.2f},{w / a:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Roofline report: read artifacts/dryrun/*.json -> the §Roofline table.
+
+Terms come from the ANALYTIC cost model (XLA cost_analysis counts scan bodies
+once — tests/test_roofline.py validates the model against scan-free configs);
+the dry-run JSON supplies the compile proof, memory analysis, and the
+collective-op census that sanity-checks the analytic collective bytes."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def load_cells(art_dir: str = "artifacts/dryrun") -> List[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        d = json.load(open(f))
+        if d.get("status") == "ok" and "analytic" in d:
+            cells.append(d)
+    return cells
+
+
+def terms(d: dict) -> dict:
+    a = d["analytic"]
+    compute_s = a["hlo_flops"] / PEAK_FLOPS
+    memory_s = a["hbm_bytes"] / HBM_BW
+    coll_s = a["coll_bytes"] / LINK_BW
+    step = max(compute_s, memory_s, coll_s)
+    bottleneck = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    useful = (a["model_flops_global"] / a["hlo_flops_global"]
+              if a["hlo_flops_global"] else 0.0)
+    mfu = (a["model_flops_global"] / (step * a["chips"] * PEAK_FLOPS)
+           if step else 0.0)
+    return dict(compute_s=compute_s, memory_s=memory_s, coll_s=coll_s,
+                step_s=step, bottleneck=bottleneck, useful=useful, mfu=mfu)
+
+
+def render(cells: List[dict], mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | coll s | bottleneck "
+        "| useful FLOP frac | roofline MFU |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for d in cells:
+        if d["mesh"] != mesh:
+            continue
+        t = terms(d)
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {t['compute_s']:.3e} "
+            f"| {t['memory_s']:.3e} | {t['coll_s']:.3e} | {t['bottleneck']} "
+            f"| {t['useful']:.2f} | {t['mfu']*100:.1f}% |"
+        )
+    return "\n".join(rows)
+
+
+def run(out_lines=None):
+    cells = load_cells()
+    if not cells:
+        print("no dry-run artifacts found — run python -m repro.launch.dryrun --all")
+        return
+    print(f"== roofline ({len(cells)} cells) ==")
+    print(render(cells, "single"))
+    if out_lines is not None:
+        for d in cells:
+            t = terms(d)
+            out_lines.append(
+                f"roofline_{d['arch']}_{d['shape']}_{d['mesh']},0,"
+                f"mfu={t['mfu']*100:.1f}%:{t['bottleneck']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark entrypoint: one function per paper table / framework artifact.
+Prints a ``name,us_per_call,derived`` CSV summary at the end."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    out_lines = []
+    sections = []
+
+    def section(name, fn):
+        print(f"\n{'='*72}\n{name}\n{'='*72}")
+        try:
+            fn(out_lines)
+            sections.append((name, "ok"))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            sections.append((name, f"FAIL: {e}"))
+
+    from benchmarks import (
+        awrp_ablation,
+        expert_cache_bench,
+        grad_compress_bench,
+        kernel_bench,
+        policy_overhead,
+        roofline_report,
+        serve_quality_bench,
+        table1,
+        trace_suite,
+    )
+
+    section("Table 1 reproduction (paper §4.2)", table1.run)
+    section("Trace suite (generalization)", trace_suite.run)
+    section("AWRP(alpha,beta) ablation (beyond paper, its §5 direction)",
+            awrp_ablation.run)
+    section("Policy overhead (paper §3 overhead claim)", policy_overhead.run)
+    section("Kernel bench", kernel_bench.run)
+    section("Bounded-KV serving quality (AWRP vs baselines)",
+            serve_quality_bench.run)
+    section("Expert cache (MoE serving)", expert_cache_bench.run)
+    section("Gradient compression", grad_compress_bench.run)
+    section("Roofline report (from dry-run artifacts)", roofline_report.run)
+
+    print(f"\n{'='*72}\nCSV summary (name,us_per_call,derived)\n{'='*72}")
+    for line in out_lines:
+        print(line)
+    print()
+    for name, status in sections:
+        print(f"[{status}] {name}")
+    if any(s != "ok" for _, s in sections):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

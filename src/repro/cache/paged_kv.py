@@ -1,0 +1,194 @@
+"""Paged KV cache with AWRP eviction — the paper's technique as a
+first-class, fully vectorized serving feature (DESIGN.md §2).
+
+A bounded pool of P pages (page_size tokens each) per (layer, sequence).
+Page metadata mirrors the paper exactly: frequency F_p, recency clock R_p,
+global clock N; a page is *referenced* at a decode step when its attention
+mass exceeds tau = 1/num_resident_pages; eviction on pool-full allocation is
+``argmin W_p = F_p / (N - R_p)`` — eq. (1) verbatim, computed lazily at miss
+(allocation) time only, exactly like the paper's lazy weight update.
+
+All arrays carry leading (B,) — one policy instance per sequence — and the
+model stacks a further (n_repeats,) layer dim scanned by lax.scan (one policy
+instance per layer, since attention mass differs per layer).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_policies import awrp_weights
+
+INT_MAX = 2**31 - 1
+
+
+class PagedPool(NamedTuple):
+    """Per-layer-per-sequence bounded KV pool."""
+
+    k: jax.Array  # (B, P, page, kvd)
+    v: jax.Array  # (B, P, page, kvd)
+    f: jax.Array  # (B, P) int32 — paper's F_i
+    r: jax.Array  # (B, P) int32 — paper's R_i
+    page_start: jax.Array  # (B, P) int32 token index of page start; -1 free
+    clock: jax.Array  # (B,) int32 — paper's N (one policy clock per sequence)
+    open_slot: jax.Array  # (B,) int32 slot currently being written
+
+
+def init_pool(batch: int, pages: int, page_size: int, kvd: int, dtype) -> PagedPool:
+    return PagedPool(
+        k=jnp.zeros((batch, pages, page_size, kvd), dtype),
+        v=jnp.zeros((batch, pages, page_size, kvd), dtype),
+        f=jnp.zeros((batch, pages), jnp.int32),
+        r=jnp.zeros((batch, pages), jnp.int32),
+        page_start=jnp.full((batch, pages), -1, jnp.int32),
+        clock=jnp.zeros((batch,), jnp.int32),
+        open_slot=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def abstract_pool(batch: int, pages: int, page_size: int, kvd: int, dtype):
+    sds = jax.ShapeDtypeStruct
+    return PagedPool(
+        k=sds((batch, pages, page_size, kvd), dtype),
+        v=sds((batch, pages, page_size, kvd), dtype),
+        f=sds((batch, pages), jnp.int32),
+        r=sds((batch, pages), jnp.int32),
+        page_start=sds((batch, pages), jnp.int32),
+        clock=sds((batch,), jnp.int32),
+        open_slot=sds((batch,), jnp.int32),
+    )
+
+
+def awrp_victim(
+    f: jax.Array,  # (B, P) int32
+    r: jax.Array,  # (B, P) int32
+    clock: jax.Array,  # (B,) int32
+    valid: jax.Array,  # (B, P) bool — resident pages
+    pinned: jax.Array,  # (B, P) bool — excluded (the open page)
+) -> jax.Array:
+    """Vectorized eq. (1) victim select; same float32 ops / first-index
+    tie-break as the host oracle (bit-exact, property-tested)."""
+    w = awrp_weights(f, r, clock[:, None])
+    w = jnp.where(valid & ~pinned, w, jnp.inf)
+    return jnp.argmin(w, axis=-1).astype(jnp.int32)  # (B,)
+
+
+def insert_token(
+    pool: PagedPool,
+    new_k: jax.Array,  # (B, kvd)
+    new_v: jax.Array,  # (B, kvd)
+    pos: jax.Array,  # scalar int32 — token index being written
+    page_size: int,
+    policy: str = "awrp",
+) -> PagedPool:
+    """Write one token row; on page-boundary allocate (evicting by ``policy``
+    when the pool is full).  Branch-free — runs under jit/scan."""
+    from repro.core.kv_policy import page_victim
+
+    B, P = pool.f.shape
+    within = (pos % page_size).astype(jnp.int32)
+    need_alloc = within == 0
+
+    # --- allocation path (computed always, selected by need_alloc) ---------
+    free = pool.page_start < 0  # (B, P)
+    has_free = jnp.any(free, axis=-1)
+    first_free = jnp.argmax(free, axis=-1).astype(jnp.int32)
+    pinned = jax.nn.one_hot(pool.open_slot, P, dtype=bool)
+    victim = page_victim(policy, pool.f, pool.r, pool.page_start, pool.clock,
+                         pinned)
+    alloc_slot = jnp.where(has_free, first_free, victim)  # (B,)
+    slot = jnp.where(need_alloc, alloc_slot, pool.open_slot)  # (B,)
+
+    bidx = jnp.arange(B)
+    # on allocation: reset the page (paper insert rule: F=1, R=N)
+    f = pool.f.at[bidx, slot].set(
+        jnp.where(need_alloc, 1, pool.f[bidx, slot])
+    )
+    r = pool.r.at[bidx, slot].set(
+        jnp.where(need_alloc, pool.clock, pool.r[bidx, slot])
+    )
+    page_start = pool.page_start.at[bidx, slot].set(
+        jnp.where(need_alloc, pos, pool.page_start[bidx, slot])
+    )
+    zero_row = jnp.zeros_like(pool.k[:, 0])  # (B, page, kvd)
+    k = pool.k.at[bidx, slot].set(
+        jnp.where(need_alloc[..., None, None] if need_alloc.ndim else need_alloc,
+                  zero_row, pool.k[bidx, slot])
+    )
+    v = pool.v.at[bidx, slot].set(
+        jnp.where(need_alloc[..., None, None] if need_alloc.ndim else need_alloc,
+                  zero_row, pool.v[bidx, slot])
+    )
+    k = k.at[bidx, slot, within].set(new_k)
+    v = v.at[bidx, slot, within].set(new_v)
+    open_slot = jnp.where(need_alloc, slot, pool.open_slot).astype(jnp.int32)
+    return PagedPool(k, v, f, r, page_start, pool.clock, open_slot)
+
+
+def kv_positions(pool: PagedPool, pos: jax.Array, page_size: int) -> jax.Array:
+    """(B, P*page) token index per cache row; -1 for invalid rows."""
+    B, P = pool.f.shape
+    row = jnp.arange(page_size, dtype=jnp.int32)
+    tok = pool.page_start[..., None] + row[None, None]  # (B, P, page)
+    valid = (pool.page_start[..., None] >= 0) & (tok <= pos)
+    return jnp.where(valid, tok, -1).reshape(B, P * page_size)
+
+
+def score_update(
+    pool: PagedPool,
+    attn_mass: jax.Array,  # (B, P*page) softmax mass per cache row
+    page_size: int,
+) -> PagedPool:
+    """Paper hit rule on pages: referenced iff mass >= 1/resident_count;
+    F += 1 and R = N on reference.  One clock tick per decode step."""
+    B, P = pool.f.shape
+    mass = attn_mass.reshape(B, P, page_size).sum(-1)  # (B, P)
+    resident = (pool.page_start >= 0).sum(-1, keepdims=True)  # (B, 1)
+    tau = 1.0 / jnp.maximum(resident.astype(jnp.float32), 1.0)
+    clock = pool.clock + 1
+    referenced = (mass >= tau) & (pool.page_start >= 0)
+    f = jnp.where(referenced, pool.f + 1, pool.f)
+    r = jnp.where(referenced, clock[:, None], pool.r)
+    return pool._replace(f=f, r=r, clock=clock)
+
+
+# ---------------------------------------------------------------------------
+# simple full / ring-window caches (decode baselines)
+# ---------------------------------------------------------------------------
+
+
+def full_cache_insert(
+    k_cache: jax.Array,  # (B, T, kvd)
+    v_cache: jax.Array,
+    new_k: jax.Array,  # (B, 1, kvd)
+    new_v: jax.Array,
+    pos: jax.Array,  # scalar int32
+) -> Tuple[jax.Array, jax.Array]:
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, new_k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, new_v, pos, axis=1)
+    return k_cache, v_cache
+
+
+def ring_insert(
+    k_cache: jax.Array,  # (B, W, kvd)
+    v_cache: jax.Array,
+    new_k: jax.Array,
+    new_v: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    W = k_cache.shape[1]
+    slot = (pos % W).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, new_k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, new_v, slot, axis=1)
+    return k_cache, v_cache
+
+
+def ring_positions(pos: jax.Array, window: int) -> jax.Array:
+    """(W,) token index held by each ring slot after inserting ``pos``."""
+    slots = jnp.arange(window, dtype=jnp.int32)
+    # latest token with index % W == slot and index <= pos
+    cand = pos - ((pos - slots) % window)
+    return jnp.where(cand >= 0, cand, -1)

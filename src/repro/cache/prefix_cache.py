@@ -1,0 +1,65 @@
+"""Host-side prompt/prefix cache with pluggable replacement policy.
+
+vLLM-style prefix reuse at whole-prompt granularity (exact match on the
+page-aligned prompt): a hit returns the stored decode caches so prefill is
+skipped entirely.  Eviction is driven by a ``repro.core.policies`` instance —
+AWRP by default (the paper's application table lists web/database caching as
+the target domain; a serving prompt cache is exactly that).
+
+Entries are device pytrees; capacity counts entries (pages of host memory
+would be the production unit — the accounting hooks are `entry_bytes`).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.policies import make_policy
+
+
+def prompt_key(tokens) -> int:
+    # non-negative: the slot-array policies use negative ids as "empty"
+    return hash(tuple(int(t) for t in tokens)) & 0x7FFF_FFFF_FFFF_FFFF
+
+
+class PrefixCache:
+    def __init__(self, capacity: int = 16, policy: str = "awrp"):
+        self.policy = make_policy(policy, capacity)
+        self.store: Dict[int, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, tokens) -> Optional[Any]:
+        key = prompt_key(tokens)
+        if key in self.store:
+            self.policy.access(key)  # hit: F += 1, R = clock
+            self.hits += 1
+            return self.store[key]
+        self.misses += 1
+        return None
+
+    def insert(self, tokens, caches: Any) -> None:
+        key = prompt_key(tokens)
+        if key in self.store:
+            self.policy.access(key)
+            self.store[key] = caches
+            return
+        before = self.policy.resident_set()
+        self.policy.access(key)  # may evict
+        after = self.policy.resident_set()
+        for evicted in before - after:
+            self.store.pop(evicted, None)
+        self.store[key] = caches
+
+    @property
+    def hit_ratio(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def entry_bytes(self) -> int:
+        return sum(
+            sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(v))
+            for v in self.store.values()
+        )

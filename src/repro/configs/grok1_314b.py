@@ -1,0 +1,49 @@
+"""grok-1-314b [moe] — 8 experts, top-2. [hf:xai-org/grok-1; unverified]
+
+8 experts do not divide the 16-way model axis, so the default MoE sharding is
+TP (shard every expert's d_ff = 32768 over "model"); EP is selectable for
+meshes where it divides (DESIGN.md §4 — a hillclimb knob).
+"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab=131072,
+    n_experts=8,
+    top_k=2,
+    act="gelu",
+    moe_sharding="tp",
+    microbatches=16,
+    # 314B params: fp32 master + m/v does not fit 256 x 16GB; bf16 adam
+    # states + on-the-fly fp32 update keep the train cell inside HBM
+    # (DESIGN.md §4; the multi-pod mesh relaxes this).
+    adam_dtype="bfloat16",
+    grad_accum_dtype="bfloat16",
+    opt_master=False,
+    decode_param_mode="tp2d",
+    run_shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_reasons={"long_500k": "pure full-attention arch (DESIGN.md §5)"},
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG,
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab=512,
+    n_experts=4,
+    top_k=2,
+)

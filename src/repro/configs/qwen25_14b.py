@@ -1,0 +1,33 @@
+"""qwen2.5-14b [dense] — GQA with QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=13824,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    microbatches=8,
+    run_shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_reasons={"long_500k": "pure full-attention arch (DESIGN.md §5)"},
+)
+
+SMOKE_CONFIG = dataclasses.replace(
+    CONFIG,
+    n_layers=3,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=320,
+    vocab=512,
+)

@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — AWRP and baseline replacement policies,
+the trace simulator, and the KV-page adaptation (kv_policy)."""
+
+from .policies import (  # noqa: F401
+    AAWRP,
+    AWRP,
+    ARC,
+    CAR,
+    FIFO,
+    LFU,
+    LRU,
+    OPT,
+    POLICIES,
+    RANDOM,
+    WRP,
+    ReplacementPolicy,
+    TwoQ,
+    make_policy,
+)
+from .simulator import SimResult, hit_ratio_table, simulate, sweep  # noqa: F401
+from .traces import TRACES  # noqa: F401

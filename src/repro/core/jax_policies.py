@@ -1,0 +1,140 @@
+"""Vectorized, functional cache-replacement policies in pure JAX.
+
+This is the paper's core contribution adapted to TPU: AWRP's state is two
+integer vectors ``(F, R)`` plus a scalar clock; the weight ``W = F/(N-R)`` is
+one VPU elementwise pass and the eviction decision one ``argmin``.  No lists,
+no pointers, no per-hit data movement — which is precisely the overhead
+argument the paper makes against LRU/ARC/CAR, realized on SIMD hardware.
+
+API::
+
+    state = init_state(capacity)
+    state, hit = access(state, block, policy="awrp")      # single access
+    hits = simulate_trace(trace, capacity, policy="awrp") # lax.scan, jittable
+    # batched (e.g. one cache per sequence in a serving batch):
+    states, hits = jax.vmap(partial(access, policy="awrp"))(states, blocks)
+
+Decision parity with ``repro.core.policies`` oracles is property-tested
+bit-exactly (same float32 weight arithmetic, same first-index argmin).
+
+Pointer-based policies (ARC/CAR/2Q) intentionally have no device version —
+their data-dependent list surgery does not vectorize; see DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CacheState",
+    "init_state",
+    "access",
+    "simulate_trace",
+    "awrp_weights",
+    "victim_slot",
+    "JAX_POLICIES",
+]
+
+INT_MAX = np.iinfo(np.int32).max
+
+JAX_POLICIES = ("awrp", "lru", "fifo", "lfu")
+
+
+class CacheState(NamedTuple):
+    """One cache's state; all policies share the layout (unused fields cost
+    nothing after DCE in jit)."""
+
+    blocks: jax.Array  # (C,) int32, -1 = empty
+    f: jax.Array  # (C,) int32 frequency counters
+    r: jax.Array  # (C,) int32 last-access clock
+    ins: jax.Array  # (C,) int32 insertion clock (FIFO)
+    clock: jax.Array  # () int32 global access clock N
+
+
+def init_state(capacity: int) -> CacheState:
+    return CacheState(
+        blocks=jnp.full((capacity,), -1, dtype=jnp.int32),
+        f=jnp.zeros((capacity,), dtype=jnp.int32),
+        r=jnp.zeros((capacity,), dtype=jnp.int32),
+        ins=jnp.zeros((capacity,), dtype=jnp.int32),
+        clock=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def awrp_weights(f: jax.Array, r: jax.Array, clock: jax.Array) -> jax.Array:
+    """Paper eq. (1): W_i = F_i / (N - R_i), float32, residents only
+    (callers mask empties to +inf)."""
+    dt = jnp.maximum(clock - r, 1).astype(jnp.float32)
+    return f.astype(jnp.float32) / dt
+
+
+def victim_slot(state: CacheState, policy: str) -> jax.Array:
+    """Index of the eviction victim under ``policy`` (assumes a full cache;
+    empty slots are masked out so a partially-filled cache is also safe)."""
+    occ = state.blocks >= 0
+    if policy == "awrp":
+        w = awrp_weights(state.f, state.r, state.clock)
+        w = jnp.where(occ, w, jnp.inf)
+        return jnp.argmin(w)
+    if policy == "lru":
+        return jnp.argmin(jnp.where(occ, state.r, INT_MAX))
+    if policy == "fifo":
+        return jnp.argmin(jnp.where(occ, state.ins, INT_MAX))
+    if policy == "lfu":
+        # lexicographic (frequency, recency) in exact integer arithmetic
+        fmasked = jnp.where(occ, state.f, INT_MAX)
+        minf = jnp.min(fmasked)
+        cand = fmasked == minf
+        return jnp.argmin(jnp.where(cand, state.r, INT_MAX))
+    raise ValueError(f"unknown device policy {policy!r}; have {JAX_POLICIES}")
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def access(
+    state: CacheState, block: jax.Array, *, policy: str = "awrp"
+) -> Tuple[CacheState, jax.Array]:
+    """One access. Fully branch-free (select-based) — scan/vmap friendly."""
+    block = block.astype(jnp.int32)
+    clock = state.clock + 1
+
+    match = state.blocks == block
+    is_hit = jnp.any(match)
+    hit_slot = jnp.argmax(match)
+
+    empty = state.blocks < 0
+    has_empty = jnp.any(empty)
+    first_empty = jnp.argmax(empty)
+
+    victim = victim_slot(state, policy)
+    slot = jnp.where(is_hit, hit_slot, jnp.where(has_empty, first_empty, victim))
+
+    new_f = jnp.where(is_hit, state.f[slot] + 1, 1).astype(jnp.int32)
+    new_ins = jnp.where(is_hit, state.ins[slot], clock).astype(jnp.int32)
+    new_state = CacheState(
+        blocks=state.blocks.at[slot].set(block),
+        f=state.f.at[slot].set(new_f),
+        r=state.r.at[slot].set(clock),
+        ins=state.ins.at[slot].set(new_ins),
+        clock=clock,
+    )
+    return new_state, is_hit
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "policy"))
+def simulate_trace(
+    trace: jax.Array, capacity: int, *, policy: str = "awrp"
+) -> jax.Array:
+    """Run a whole trace through one cache with ``lax.scan``; returns the
+    per-access hit bitvector (device-resident, differentiable-free)."""
+
+    def step(state, block):
+        state, hit = access(state, block, policy=policy)
+        return state, hit
+
+    _, hits = jax.lax.scan(step, init_state(capacity), trace.astype(jnp.int32))
+    return hits

@@ -1,0 +1,50 @@
+"""Policy-pluggable victim selection for KV pages (the paper's technique and
+its baselines, applied to the serving cache).
+
+``page_victim`` is the single decision point used by the paged pool: AWRP is
+the paper's eq. (1); LRU/FIFO/LFU are the baselines the paper compares
+against, re-expressed on page metadata so the serving ablation
+(benchmarks/serve_policy_bench.py) is apples-to-apples.  All are pure
+vectorized ops — see DESIGN.md §2 for why ARC/CAR stay host-side.
+
+On TPU the AWRP path can route through the fused Pallas kernel
+(``repro.kernels.ops.awrp_select``); the jnp fallback used inside the
+GSPMD-partitioned decode step is decision-identical (property-tested).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_policies import awrp_weights
+
+INT_MAX = 2**31 - 1
+
+PAGE_POLICIES = ("awrp", "lru", "fifo", "lfu")
+
+
+def page_victim(
+    policy: str,
+    f: jax.Array,  # (B, P) int32 frequency
+    r: jax.Array,  # (B, P) int32 last-reference clock
+    page_start: jax.Array,  # (B, P) int32 token start, -1 free
+    clock: jax.Array,  # (B,) int32
+    pinned: jax.Array,  # (B, P) bool
+) -> jax.Array:
+    valid = (page_start >= 0) & ~pinned
+    if policy == "awrp":
+        w = awrp_weights(f, r, clock[:, None])
+        return jnp.argmin(jnp.where(valid, w, jnp.inf), axis=-1).astype(jnp.int32)
+    if policy == "lru":
+        return jnp.argmin(jnp.where(valid, r, INT_MAX), axis=-1).astype(jnp.int32)
+    if policy == "fifo":
+        return jnp.argmin(
+            jnp.where(valid, page_start, INT_MAX), axis=-1
+        ).astype(jnp.int32)
+    if policy == "lfu":
+        fm = jnp.where(valid, f, INT_MAX)
+        minf = jnp.min(fm, axis=-1, keepdims=True)
+        cand = fm == minf
+        return jnp.argmin(jnp.where(cand, r, INT_MAX), axis=-1).astype(jnp.int32)
+    raise ValueError(f"unknown page policy {policy!r}; have {PAGE_POLICIES}")

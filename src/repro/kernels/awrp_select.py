@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused AWRP weight + masked argmin victim selection.
+
+The eviction decision is the paper's hot loop: every pool-full page
+allocation scans all P pages' metadata, computes W = F/(N-R) (eq. 1) and
+takes the argmin.  Fused in one VPU pass over VMEM-resident metadata —
+no HBM round-trip for the weight vector, no separate mask/argmin kernels.
+
+Layout: metadata vectors are (B, P) int32 with P padded to the 128-lane
+boundary by the ops.py wrapper; grid is (B,) — one program per sequence
+(policy instances are independent, so the grid parallelizes freely).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(f_ref, r_ref, clock_ref, valid_ref, pinned_ref, out_ref):
+    f = f_ref[...]  # (1, P) int32
+    r = r_ref[...]
+    clock = clock_ref[0]
+    valid = valid_ref[...] != 0
+    pinned = pinned_ref[...] != 0
+    # paper eq. (1), same float32 ops as the host oracle (bit-exact decisions)
+    dt = jnp.maximum(clock - r, 1).astype(jnp.float32)
+    w = f.astype(jnp.float32) / dt
+    w = jnp.where(valid & ~pinned, w, jnp.inf)
+    out_ref[0] = jnp.argmin(w[0]).astype(jnp.int32)
+
+
+def awrp_select_kernel(
+    f: jax.Array,  # (B, P) int32, P % 128 == 0
+    r: jax.Array,  # (B, P) int32
+    clock: jax.Array,  # (B,) int32
+    valid: jax.Array,  # (B, P) int32 (0/1)
+    pinned: jax.Array,  # (B, P) int32 (0/1)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, P = f.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+            pl.BlockSpec((1, P), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(f, r, clock, valid, pinned)

@@ -1,0 +1,76 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles TPU-friendly padding (lane-aligned page counts, MXU-aligned seq
+tiles) and the interpret-mode fallback used on CPU (this container) — on a
+real TPU set ``interpret=False`` (the default resolves via backend check)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.awrp_select import awrp_select_kernel
+from repro.kernels.flash_attn import flash_attention_kernel
+from repro.kernels.paged_attn import paged_attention_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def awrp_select(f, r, clock, valid, pinned, *, interpret: bool | None = None):
+    """(B, P) int32 metadata -> (B,) int32 victim slots (paper eq. 1)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, P = f.shape
+    pad = (-P) % 128  # lane alignment
+    if pad:
+        f = jnp.pad(f, ((0, 0), (0, pad)))
+        r = jnp.pad(r, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))  # padded slots invalid
+        pinned = jnp.pad(pinned, ((0, 0), (0, pad)))
+    return awrp_select_kernel(
+        f.astype(jnp.int32), r.astype(jnp.int32), clock.astype(jnp.int32),
+        valid.astype(jnp.int32), pinned.astype(jnp.int32),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_start, cur_pos,
+                    *, interpret: bool | None = None):
+    """Decode attention over an AWRP pool; returns (out, page_mass)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return paged_attention_kernel(
+        q, k_pages, v_pages, page_start.astype(jnp.int32),
+        cur_pos.astype(jnp.int32), interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret: bool | None = None):
+    """Tiled causal flash attention (fwd). Pads seq dims to tile multiples."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, Sq, KVH, G, hd = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, max(Sq, 16))
+    block_k = min(block_k, max(Skv, 16))
+    pq, pk = (-Sq) % block_q, (-Skv) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    out = flash_attention_kernel(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, kv_len=Skv, interpret=interpret,
+    )
+    return out[:, :Sq]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``ref_*`` matches its kernel's signature and semantics exactly; kernel
+tests sweep shapes/dtypes in interpret mode and assert allclose against
+these (and, for awrp_select, bit-exact equality with the host policy)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_awrp_select(f, r, clock, valid, pinned):
+    """(B,P) metadata -> (B,) victim slot. Paper eq. (1), float32, first-index
+    argmin — identical ordering to repro.core.{policies,jax_policies}."""
+    dt = jnp.maximum(clock[:, None] - r, 1).astype(jnp.float32)
+    w = f.astype(jnp.float32) / dt
+    w = jnp.where((valid != 0) & (pinned == 0), w, jnp.inf)
+    return jnp.argmin(w, axis=-1).astype(jnp.int32)
+
+
+def ref_paged_attention(q, k_pages, v_pages, page_start, cur_pos):
+    """q (B,KVH,G,hd); pages (B,P,page,KVH,hd) -> (out, page_mass)."""
+    B, P, page, KVH, hd = k_pages.shape
+    row = jnp.arange(page, dtype=jnp.int32)
+    tok = page_start[..., None] + row  # (B,P,page)
+    valid = (page_start[..., None] >= 0) & (tok <= cur_pos[:, None, None])
+    kf = k_pages.reshape(B, P * page, KVH, hd).astype(jnp.float32)
+    vf = v_pages.reshape(B, P * page, KVH, hd).astype(jnp.float32)
+    vmask = valid.reshape(B, P * page)
+    s = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(hd)
+    s = jnp.where(vmask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(vmask[:, None, None], p, 0.0)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, vf)
+    mass = p.sum(axis=(1, 2)).reshape(B, P, page).sum(-1)
+    return out.astype(q.dtype), mass
+
+
+def ref_flash_attention(q, k, v, *, causal=True, window=0):
+    """q (B,Sq,KVH,G,hd), k/v (B,Skv,KVH,hd) — plain softmax attention."""
+    B, Sq, KVH, G, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqkgh,bckh->bkgqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

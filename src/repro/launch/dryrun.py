@@ -1,0 +1,238 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op);
+  * the per-device memory fits (memory_analysis);
+  * and it extracts the roofline terms (cost_analysis + HLO collectives).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen25_14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out artifacts/dryrun]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, load_config
+from repro.launch import inputs as I
+from repro.launch.mesh import batch_shards, make_production_mesh
+from repro.models import model as M
+from repro.optim import optimizer as O
+from repro.roofline import analysis as R
+from repro.sharding.specs import activate, make_rules
+from repro.train.train_step import effective_microbatches, make_train_step
+
+
+def build_cell(cfg, shape, mesh, rules):
+    """Returns (fn, args_specs, in_shardings, donate) for one cell."""
+    pspecs = I.params_shardings(cfg, mesh, rules)
+    params = M.abstract_params(cfg)
+    params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params, pspecs,
+    )
+
+    if shape.kind == "train":
+        oc = O.OptConfig(adam_dtype=cfg.adam_dtype, master_weights=cfg.opt_master)
+        n_micro = effective_microbatches(cfg, shape.global_batch, batch_shards(mesh))
+        step = make_train_step(cfg, oc, n_micro)
+        opt = O.abstract_opt_state(params, oc)
+        # optimizer state shards like params; step counter replicated
+        opt_shardings = O.OptState(
+            jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            jax.tree.map(lambda sh: sh, pspecs),
+            jax.tree.map(lambda sh: sh, pspecs),
+            jax.tree.map(lambda sh: sh, pspecs) if cfg.opt_master else None,
+        )
+        opt = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            opt, opt_shardings,
+        )
+        batch = I.batch_specs(cfg, shape, mesh, rules)
+        return step, (params, opt, batch), (0, 1), (
+            jax.tree.map(lambda s: s.sharding, params),
+            jax.tree.map(lambda s: s.sharding, opt),
+            None,
+        )
+
+    if shape.kind == "prefill":
+        batch = I.batch_specs(cfg, shape, mesh, rules)
+
+        def prefill_fn(p, b):
+            return M.prefill(p, cfg, b, max_len=shape.seq_len)
+
+        return prefill_fn, (params, batch), (), None
+
+    # decode
+    token, caches, mode = I.decode_specs(cfg, shape, mesh, rules)
+
+    def serve_step(p, t, c):
+        return M.decode_step(p, cfg, t, c, kv_mode=mode)
+
+    # out_shardings must mirror the input cache shardings or the cache
+    # donation silently fails and the whole KV cache is copied (a multi-GiB
+    # temp at 32k decode)
+    cache_out = jax.tree.map(lambda s: s.sharding, caches)
+    return serve_step, (params, token, caches), (2,), (None, cache_out)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import dataclasses as _dc
+
+    cfg = load_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    long = shape.global_batch == 1
+    rules = make_rules(
+        multi_pod=multi, moe_sharding=cfg.moe_sharding, shard_pages=long,
+        param_mode=cfg.decode_param_mode if shape.kind == "decode" else "fsdp",
+        tp_feat=cfg.tp_feat, seq_parallel=cfg.seq_parallel,
+    )
+    t0 = time.time()
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": mesh.size, "status": "ok", "overrides": overrides or {},
+    }
+    try:
+        with activate(mesh, rules):
+            fn, args, donate, out_sh = build_cell(cfg, shape, mesh, rules)
+            jit_kw = {"donate_argnums": donate}
+            if out_sh is not None:
+                jit_kw["out_shardings"] = out_sh
+            lowered = jax.jit(fn, **jit_kw).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = R.collective_bytes(hlo)
+        from repro.roofline.analytic import cell_costs
+
+        rec.update(
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            transcendentals=float(ca.get("transcendentals", 0.0)),
+            collectives=coll,
+            analytic=cell_costs(cfg, shape, multi_pod=multi),
+            model_flops=R.model_flops_for(cfg, shape),
+            memory={
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            },
+            n_params=cfg.n_params(),
+            n_active_params=cfg.n_active_params(),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+        )
+        # HLO collective instruction census (for the perf log)
+        rec["collective_ops"] = {
+            op: hlo.count(f" {op}(") + hlo.count(f" {op}-start(")
+            for op in ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute")
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable), e.g. "
+                         "--set attention_schedule=balanced")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "True", "false", "False"):
+            v = v in ("true", "True")
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    archs = ARCH_IDS if args.all or not args.arch else (args.arch,)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = load_config(arch)
+        shapes = (
+            cfg.run_shapes if args.all or not args.shape else (args.shape,)
+        )
+        for shape_name in shapes:
+            if shape_name not in cfg.run_shapes:
+                print(f"SKIP {arch} {shape_name}: {cfg.skip_reasons.get(shape_name)}")
+                n_skip += 1
+                continue
+            for mesh_name in meshes:
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") == "ok":
+                            n_ok += 1
+                            continue
+                rec = run_cell(arch, shape_name, mesh_name, args.out,
+                               overrides=overrides, tag=args.tag)
+                ok = rec["status"] == "ok"
+                n_ok += ok
+                n_fail += not ok
+                if ok:
+                    print(
+                        f"OK   {arch:18s} {shape_name:12s} {mesh_name:6s} "
+                        f"flops/dev={rec['flops']:.3e} "
+                        f"coll={rec['collectives']['total']:.3e}B "
+                        f"temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                        f"compile={rec['compile_s']}s",
+                        flush=True,
+                    )
+                else:
+                    print(f"FAIL {arch} {shape_name} {mesh_name}: {rec['error']}",
+                          flush=True)
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Input specs for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStructs (with NamedShardings attached) for
+the dry-run; ``concrete_batch`` materializes small real batches for tests and
+examples.  The same code path builds both, so what we compile is what we run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import batch_axes
+from repro.models import model as M
+from repro.sharding.specs import AxisRules, named_sharding, spec_for
+
+Sds = jax.ShapeDtypeStruct
+
+
+def kv_mode_for(cfg: ModelConfig, shape: ShapeSpec) -> str:
+    """long_500k uses the paper's AWRP-bounded pool on full-attention blocks;
+    everything else decodes against the exact (full) cache."""
+    has_attn = cfg.family != "ssm"
+    if cfg.force_paged_decode and shape.kind == "decode" and has_attn:
+        return "paged"
+    return "paged" if (shape.name == "long_500k" and has_attn) else "full"
+
+
+def params_shardings(cfg: ModelConfig, mesh, rules: AxisRules):
+    axes = M.param_logical_axes(cfg)
+    return jax.tree.map(
+        lambda names: named_sharding(mesh, rules, names),
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def _sds(shape, dtype, mesh, rules, names) -> Sds:
+    return Sds(shape, dtype, sharding=named_sharding(mesh, rules, names))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> Dict[str, Sds]:
+    """Training / prefill batch (tokens + labels + modality stubs)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out = {
+        "tokens": _sds((B, S), jnp.int32, mesh, rules, ("act_batch", "act_seq")),
+    }
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32, mesh, rules, ("act_batch", "act_seq"))
+    if cfg.family == "encdec":
+        out["frames"] = _sds(
+            (B, S // cfg.enc_seq_divisor, cfg.d_model), dt, mesh, rules,
+            ("act_batch", "act_seq", "act_embed"),
+        )
+    if cfg.family == "vlm":
+        out["patches"] = _sds(
+            (B, cfg.n_patch_tokens, cfg.d_model), dt, mesh, rules,
+            ("act_batch", "act_seq", "act_embed"),
+        )
+    return out
+
+
+def decode_cache_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh, rules,
+                           abstract_caches):
+    """NamedSharding tree matching ``M.decode_caches(abstract=True)``.
+
+    batch=1 (long_500k) cannot shard the batch dim; there the resident KV
+    pages shard over the batch axes instead (split-KV decode, DESIGN.md §4)."""
+    long = shape.global_batch == 1
+    b_ax = None if long else "act_batch"
+    p_ax = "act_pages"  # maps to batch axes iff rules built w/ shard_pages
+
+    def assign(path, leaf):
+        keys = [getattr(p, "name", getattr(p, "key", None)) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        if name == "pos":
+            names: Tuple[Optional[str], ...] = ()
+        elif name in ("k", "v") and nd == 5:  # paged pool (R,B,P,page,kvd)
+            names = (None, b_ax, p_ax, None, "act_feat")
+        elif name in ("k", "v", "ck", "cv") and nd == 4:  # (R,B,T,kvd)
+            names = (None, b_ax, None, "act_feat")
+        elif name in ("k", "v") and nd == 3:  # unstacked tail (B,T,kvd)
+            names = (b_ax, None, "act_feat")
+        elif name == "state":  # (R,B,H,P,N)
+            names = (None, b_ax, "act_heads", None, None)[: nd]
+            if nd == 4:
+                names = (b_ax, "act_heads", None, None)
+        elif name == "conv":  # (R,B,dc-1,ch)
+            names = (None, b_ax, None, "act_feat")[-nd:] if nd == 4 else (
+                b_ax, None, "act_feat")
+        elif name in ("f", "r", "page_start"):  # (R,B,P)
+            names = (None, b_ax, p_ax)[-nd:]
+        elif name in ("clock", "open_slot"):  # (R,B)
+            names = (None, b_ax)[-nd:]
+        else:
+            names = (None,) * nd
+        return named_sharding(mesh, rules, names)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_caches)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, rules):
+    """(token, caches) specs for one serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    long = B == 1
+    mode = kv_mode_for(cfg, shape)
+    caches = M.decode_caches(cfg, B, S, kv_mode=mode, abstract=True)
+    shardings = decode_cache_shardings(cfg, shape, mesh, rules, caches)
+    caches = jax.tree.map(
+        lambda sds, sh: Sds(sds.shape, sds.dtype, sharding=sh), caches, shardings
+    )
+    token = _sds((B, 1), jnp.int32,
+                 mesh, rules, (None if long else "act_batch", None))
+    return token, caches, mode
+
+
+def concrete_batch(cfg: ModelConfig, B: int, S: int, key, *, labels=True):
+    kt, kf = jax.random.split(key)
+    out = {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab)}
+    if labels:
+        out["labels"] = jax.random.randint(kf, (B, S), 0, cfg.vocab)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        out["frames"] = (jax.random.normal(
+            kf, (B, S // cfg.enc_seq_divisor, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+    if cfg.family == "vlm":
+        out["patches"] = (jax.random.normal(
+            kf, (B, cfg.n_patch_tokens, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+    return out

@@ -1,0 +1,134 @@
+"""AdamW (functional, pytree-based) with production knobs:
+
+  * fp32 master weights (optional — off for the largest MoE where HBM is
+    tight; update then happens in fp32 on the fly from bf16 params);
+  * configurable m/v dtype (fp32 default, bf16 for hbm-bound configs);
+  * global-norm clipping, decoupled weight decay, cosine schedule w/ warmup.
+
+Optimizer state shardings follow the parameter shardings (FSDP => ZeRO
+sharded optimizer states for free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    adam_dtype: str = "float32"
+    master_weights: bool = True
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 params or None-like empty dict
+
+
+def init_opt_state(params, oc: OptConfig) -> OptState:
+    adt = jnp.dtype(oc.adam_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, adt)
+    m = jax.tree.map(zeros, params)
+    v = jax.tree.map(zeros, params)
+    master = (
+        jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        if oc.master_weights
+        else None
+    )
+    return OptState(jnp.zeros((), jnp.int32), m, v, master)
+
+
+def abstract_opt_state(params, oc: OptConfig) -> OptState:
+    adt = jnp.dtype(oc.adam_dtype)
+    sds = lambda p, dt: jax.ShapeDtypeStruct(p.shape, dt)
+    m = jax.tree.map(lambda p: sds(p, adt), params)
+    v = jax.tree.map(lambda p: sds(p, adt), params)
+    master = (
+        jax.tree.map(lambda p: sds(p, jnp.float32), params)
+        if oc.master_weights
+        else None
+    )
+    return OptState(jax.ShapeDtypeStruct((), jnp.int32), m, v, master)
+
+
+def schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(oc.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = oc.min_lr_frac + (1 - oc.min_lr_frac) * cos
+    return oc.lr * jnp.where(step < oc.warmup_steps, warm, frac)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(
+    params, grads, state: OptState, oc: OptConfig
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """grads: fp32 tree. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(oc, step)
+    b1c = 1 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1 - oc.b2 ** step.astype(jnp.float32)
+    adt = jnp.dtype(oc.adam_dtype)
+
+    def upd(p, g, m, v, mw):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * oc.b1 + g * (1 - oc.b1)
+        v32 = v.astype(jnp.float32) * oc.b2 + g * g * (1 - oc.b2)
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        base = (mw if mw is not None else p).astype(jnp.float32)
+        # decay only matrices (fan-in >= 2 dims), standard practice
+        wd = oc.weight_decay if p.ndim >= 2 else 0.0
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + oc.eps) + wd * base)
+        return new, m32.astype(adt), v32.astype(adt)
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.m)
+    leaves_v = treedef.flatten_up_to(state.v)
+    leaves_mw = (
+        treedef.flatten_up_to(state.master) if state.master is not None
+        else [None] * len(leaves_p)
+    )
+    new_p, new_m, new_v, new_mw = [], [], [], []
+    for p, g, m, v, mw in zip(leaves_p, leaves_g, leaves_m, leaves_v, leaves_mw):
+        n, m2, v2 = upd(p, g, m, v, mw)
+        new_p.append(n.astype(p.dtype))
+        new_m.append(m2)
+        new_v.append(v2)
+        if mw is not None:
+            new_mw.append(n)
+    params = jax.tree.unflatten(treedef, new_p)
+    new_state = OptState(
+        step,
+        jax.tree.unflatten(treedef, new_m),
+        jax.tree.unflatten(treedef, new_v),
+        jax.tree.unflatten(treedef, new_mw) if state.master is not None else None,
+    )
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,21 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key: jax.Array, *, temperature: float = 0.0,
+           top_k: int = 0, vocab: int | None = None) -> jax.Array:
+    """logits (B, 1, Vpad) -> (B, 1) int32 tokens."""
+    x = logits[:, 0].astype(jnp.float32)
+    if vocab is not None:  # mask padded vocab rows
+        x = jnp.where(jnp.arange(x.shape[-1]) < vocab, x, -jnp.inf)
+    if temperature <= 0.0:
+        return jnp.argmax(x, axis=-1).astype(jnp.int32)[:, None]
+    x = x / temperature
+    if top_k:
+        thresh = jax.lax.top_k(x, top_k)[0][..., -1:]
+        x = jnp.where(x < thresh, -jnp.inf, x)
+    return jax.random.categorical(key, x, axis=-1).astype(jnp.int32)[:, None]

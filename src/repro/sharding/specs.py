@@ -1,0 +1,143 @@
+"""Logical-axis sharding rules (GSPMD, MaxText-style).
+
+Every array in the framework is annotated with *logical* axis names; a rules
+table maps logical names to mesh axes.  Models call ``logical_shard(x, ...)``
+which is a no-op outside an ``activate(mesh, rules)`` scope, so the same model
+code runs single-device (smoke tests) and on the production mesh (dry-run).
+
+Key constraints honoured here (verified empirically, see DESIGN.md §4):
+  * jit *boundary* arrays must be evenly divisible by their mesh axes — so
+    parameters and KV caches are stored with flattened feature dims
+    (``n_heads*head_dim``; every assigned arch's flattened dims divide 16)
+    and vocab padded to a multiple of 128;
+  * *interior* ``with_sharding_constraint`` supports uneven dims (GSPMD
+    pads), so per-head activations (40/56/15/20 heads) shard over the 16-way
+    "model" axis with padding waste that shows up honestly in the roofline's
+    MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "AxisRules",
+    "make_rules",
+    "activate",
+    "active_mesh_rules",
+    "logical_shard",
+    "spec_for",
+    "named_sharding",
+]
+
+AxisRules = Dict[str, Optional[Tuple[str, ...]]]
+
+_local = threading.local()
+
+
+def make_rules(
+    *,
+    multi_pod: bool = False,
+    moe_sharding: str = "tp",
+    shard_pages: bool = False,
+    fsdp: bool = True,
+    param_mode: str = "fsdp",
+    tp_feat: bool = True,
+    seq_parallel: bool = False,
+) -> AxisRules:
+    """Build the logical->mesh translation table.
+
+    moe_sharding: "tp" shards every expert's d_ff over "model";
+                  "ep" shards the expert axis over "model".
+    shard_pages:  long-context decode (batch=1) shards resident KV pages over
+                  the batch axes (split-KV / flash-decoding across devices).
+    param_mode:   "fsdp"  — non-TP weight dim sharded over the batch axes
+                  (ZeRO-3 gather-on-use; right for training where activations
+                  dominate);
+                  "tp2d"  — feature dims sharded over (batch x model) jointly
+                  and NO gather-on-use: decode-time weights stream straight
+                  from their shards and the tiny one-token activations pay a
+                  psum instead (right for serving 100B+ models; requires
+                  feat % chips == 0 — grok-1/yi-scale archs qualify).
+    """
+    batch: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    tp2d = param_mode == "tp2d"
+    fsdp_axes = None if tp2d else (batch if fsdp else None)
+    model_axes = ("model",) if tp_feat else None
+    feat_axes = (batch + ("model",)) if tp2d else model_axes
+    ep = moe_sharding == "ep"
+    # shard_pages => long-context decode with global_batch=1: the batch dim is
+    # unshardable, the resident KV pages take the batch axes instead
+    act_batch = None if shard_pages else batch
+    return {
+        # ---- parameters ----
+        "p_vocab": ("model",),
+        "p_embed": fsdp_axes,  # FSDP dim of every weight
+        "p_feat": feat_axes,  # flattened head / mlp / inner feature dims
+        "p_experts": ("model",) if ep else None,
+        "p_expert_ff": (batch if ep else feat_axes) if tp2d else (
+            None if ep else ("model",)),
+        "p_noshard": None,
+        "layers": None,  # stacked-scan leading dim
+        # ---- activations ----
+        "act_batch": act_batch,
+        "act_seq": None,
+        "act_embed": None,
+        "act_res_seq": ("model",) if seq_parallel else None,
+        "act_heads": model_axes,
+        "act_kv_heads": model_axes,
+        "act_feat": model_axes,
+        "act_vocab": ("model",),
+        "act_experts": ("model",) if ep else None,
+        "act_expert_ff": None if ep else ("model",),
+        "act_capacity": act_batch,  # MoE token-capacity dim: data-parallel
+        "act_pages": batch if shard_pages else None,
+        "act_noshard": None,
+    }
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: AxisRules):
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = (mesh, rules)
+    try:
+        with mesh:
+            yield
+    finally:
+        _local.ctx = prev
+
+
+def active_mesh_rules():
+    return getattr(_local, "ctx", None)
+
+
+def spec_for(rules: AxisRules, names: Tuple[Optional[str], ...]) -> PartitionSpec:
+    parts = []
+    for n in names:
+        if n is None:
+            parts.append(None)
+        else:
+            if n not in rules:
+                raise KeyError(f"unknown logical axis {n!r}")
+            parts.append(rules[n])
+    return PartitionSpec(*parts)
+
+
+def named_sharding(mesh: Mesh, rules: AxisRules, names) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(rules, tuple(names)))
+
+
+def logical_shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the active rules; identity if none are active."""
+    ctx = active_mesh_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(x, named_sharding(mesh, rules, names))

@@ -1,0 +1,64 @@
+"""Training step factory: microbatched grad accumulation + AdamW update.
+
+The global batch (B_g, S) is split into ``n_micro`` chunks scanned with fp32
+gradient accumulation — this bounds activation memory (layer-boundary saves
+scale with the microbatch, not the global batch) and is how the 34B/314B
+train_4k cells fit v5e HBM (DESIGN.md §4).
+
+Optional error-feedback int8 gradient compression (``cfg.grad_compress``)
+wraps the cross-data-axis reduction (see ``optim.grad_compress``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import optimizer as O
+
+
+def effective_microbatches(cfg, global_batch: int, batch_shards: int) -> int:
+    """Largest n_micro <= cfg.microbatches with a whole per-shard batch."""
+    n = min(cfg.microbatches, max(global_batch // batch_shards, 1))
+    while global_batch % (n * batch_shards) and n > 1:
+        n -= 1
+    return max(n, 1)
+
+
+def make_train_step(cfg, oc: O.OptConfig, n_micro: int):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch`` values all carry leading dim B_g divisible by
+    n_micro."""
+
+    def micro_loss(params, mb):
+        return M.loss_fn(params, cfg, mb)
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def accum(carry, mb):
+            g_acc, loss_acc = carry
+            loss, g = jax.value_and_grad(micro_loss)(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(acc_dt), g_acc, g)
+            return (g_acc, loss_acc + loss), None
+
+        (grads, loss_sum), _ = jax.lax.scan(
+            accum, (zero_g, jnp.zeros((), jnp.float32)), micro
+        )
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / n_micro), grads)
+        if cfg.grad_compress:
+            from repro.optim.grad_compress import maybe_compress_grads
+            grads = maybe_compress_grads(grads)
+        params, opt_state, metrics = O.apply_updates(params, grads, opt_state, oc)
+        metrics["loss"] = loss_sum / n_micro
+        return params, opt_state, metrics
+
+    return train_step

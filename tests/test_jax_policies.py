@@ -1,0 +1,81 @@
+"""Device (JAX) policy layer: bit-exact parity with the numpy oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import make_policy
+from repro.core.jax_policies import (
+    JAX_POLICIES,
+    access,
+    init_state,
+    simulate_trace,
+)
+from repro.core.traces import paper_trace, trace_zipf
+
+
+def host_hits(policy, trace, cap):
+    p = make_policy(policy, cap)
+    return np.array([p.access(int(b)) for b in trace], dtype=bool), p
+
+
+@pytest.mark.parametrize("policy", JAX_POLICIES)
+def test_device_matches_host_on_paper_trace(policy):
+    tr = paper_trace()[:400]
+    cap = 48
+    ref, _ = host_hits(policy, tr, cap)
+    dev = np.asarray(simulate_trace(jnp.asarray(tr), cap, policy=policy))
+    assert (ref == dev).all(), f"{policy}: first divergence at {np.argmax(ref != dev)}"
+
+
+@pytest.mark.parametrize("policy", JAX_POLICIES)
+def test_device_resident_set_matches_host(policy):
+    tr = trace_zipf(600, 120, 0.9, seed=11)
+    cap = 32
+    _, host = host_hits(policy, tr, cap)
+    state = init_state(cap)
+    for b in tr:
+        state, _ = access(state, jnp.asarray(b), policy=policy)
+    dev_resident = set(int(x) for x in np.asarray(state.blocks) if x >= 0)
+    assert dev_resident == host.resident_set()
+
+
+def test_vmap_batched_caches_independent():
+    """One cache per sequence (the serving configuration): vmap(access)."""
+    B, cap = 4, 8
+    states = jax.vmap(lambda _: init_state(cap))(jnp.arange(B))
+    step = jax.vmap(lambda s, b: access(s, b, policy="awrp"))
+    rng = np.random.RandomState(0)
+    traces = rng.randint(0, 20, size=(16, B))
+    hits = []
+    for t in range(16):
+        states, h = step(states, jnp.asarray(traces[t]))
+        hits.append(np.asarray(h))
+    hits = np.stack(hits)  # (T, B)
+    # compare each lane against its own host policy
+    for b in range(B):
+        ref, _ = host_hits("awrp", traces[:, b], cap)
+        assert (hits[:, b] == ref).all()
+
+
+def test_simulate_trace_is_jittable_and_deterministic():
+    tr = jnp.asarray(paper_trace()[:200])
+    h1 = simulate_trace(tr, 30, policy="awrp")
+    h2 = simulate_trace(tr, 30, policy="awrp")
+    assert (np.asarray(h1) == np.asarray(h2)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    trace=st.lists(st.integers(min_value=0, max_value=25), min_size=1, max_size=150),
+    cap=st.integers(min_value=1, max_value=12),
+    policy=st.sampled_from(JAX_POLICIES),
+)
+def test_property_device_host_parity(trace, cap, policy):
+    tr = np.asarray(trace, dtype=np.int64)
+    ref, _ = host_hits(policy, tr, cap)
+    dev = np.asarray(simulate_trace(jnp.asarray(tr), cap, policy=policy))
+    assert (ref == dev).all()

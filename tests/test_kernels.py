@@ -1,0 +1,169 @@
+"""Pallas kernel validation: interpret-mode sweeps vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.awrp_select import awrp_select_kernel
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+# ---------------------------------------------------------------------------
+# awrp_select
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,P", [(1, 8), (4, 64), (3, 130), (2, 256)])
+def test_awrp_select_matches_ref(B, P):
+    rng = np.random.RandomState(B * 1000 + P)
+    f = rng.randint(1, 50, size=(B, P)).astype(np.int32)
+    r = rng.randint(0, 100, size=(B, P)).astype(np.int32)
+    clock = rng.randint(101, 200, size=(B,)).astype(np.int32)
+    valid = (rng.rand(B, P) < 0.9).astype(np.int32)
+    valid[:, 0] = 1  # at least one candidate
+    pinned = (rng.rand(B, P) < 0.1).astype(np.int32) * valid
+    pinned[:, 0] = 0
+    got = ops.awrp_select(*map(jnp.asarray, (f, r, clock, valid, pinned)),
+                          interpret=True)
+    want = ref.ref_awrp_select(*map(jnp.asarray, (f, r, clock, valid, pinned)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_awrp_select_matches_host_policy():
+    """Kernel decisions == numpy AWRP oracle (the paper's policy), bit-exact."""
+    from repro.core.policies import AWRP
+
+    rng = np.random.RandomState(7)
+    for _ in range(25):
+        P = rng.randint(2, 40)
+        clock = rng.randint(P + 1, 300)
+        f = rng.randint(1, 30, size=P).astype(np.int32)
+        r = rng.randint(0, clock, size=P).astype(np.int32)
+        host = AWRP(P)
+        host.blocks = np.arange(P, dtype=np.int64)
+        host.F, host.R, host.clock = f.astype(np.int64), r.astype(np.int64), clock
+        got = ops.awrp_select(
+            jnp.asarray(f)[None], jnp.asarray(r)[None],
+            jnp.asarray([clock], jnp.int32),
+            jnp.ones((1, P), jnp.int32), jnp.zeros((1, P), jnp.int32),
+            interpret=True,
+        )
+        assert int(got[0]) == host.victim_slot()
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,P,page,KVH,G,hd", [
+    (2, 4, 8, 2, 2, 32),
+    (1, 8, 16, 4, 1, 64),
+    (2, 3, 8, 1, 4, 16),
+])
+def test_paged_attention_matches_ref(B, P, page, KVH, G, hd, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    q = (jax.random.normal(ks[0], (B, KVH, G, hd), jnp.float32)).astype(dtype)
+    kp = (jax.random.normal(ks[1], (B, P, page, KVH, hd), jnp.float32) * 0.3).astype(dtype)
+    vp = (jax.random.normal(ks[2], (B, P, page, KVH, hd), jnp.float32) * 0.3).astype(dtype)
+    # residency: some pages free, current page partially filled
+    page_start = np.full((B, P), -1, np.int32)
+    for b in range(B):
+        n_res = 2 + b % (P - 1)
+        for i in range(n_res):
+            page_start[b, i] = i * page
+    cur = jnp.asarray([page_start[b].max() + page // 2 for b in range(B)], jnp.int32)
+    out, mass = ops.paged_attention(q, kp, vp, jnp.asarray(page_start), cur,
+                                    interpret=True)
+    rout, rmass = ref.ref_paged_attention(q, kp, vp, jnp.asarray(page_start), cur)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(rout, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(mass), np.asarray(rmass),
+                               rtol=1e-3, atol=1e-3)
+    # masses are a probability decomposition: sum == 1 per sequence... per head
+    np.testing.assert_allclose(np.asarray(mass).sum(-1), KVH * G, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48), (False, 0)])
+@pytest.mark.parametrize("B,S,KVH,G,hd", [(1, 128, 2, 2, 32), (2, 160, 1, 3, 64)])
+def test_flash_attention_matches_ref(B, S, KVH, G, hd, causal, window, dtype):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = (jax.random.normal(ks[0], (B, S, KVH, G, hd), jnp.float32)).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32) * 0.3).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    want = ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_layer_implementation():
+    """Kernel == the model's chunked-jnp flash (the train/prefill path)."""
+    from repro.models.layers import flash_attention as jnp_flash
+
+    key = jax.random.PRNGKey(2)
+    B, S, KVH, G, hd = 2, 96, 2, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, KVH, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32) * 0.5
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32) * 0.5
+    pos = jnp.arange(S, dtype=jnp.int32)
+    a = jnp_flash(q, k, v, q_positions=pos, kv_positions=pos, causal=True,
+                  q_chunk=32, kv_chunk=32)
+    b = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_balanced_schedule_matches_rect_and_ref():
+    """§Perf hillclimb correctness: balanced causal schedule == oracle."""
+    from repro.models.layers import flash_attention, flash_attention_balanced
+
+    key = jax.random.PRNGKey(5)
+    B, S, KVH, G, hd = 2, 256, 2, 2, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, KVH, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32) * 0.4
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32) * 0.4
+    pos = jnp.arange(S, dtype=jnp.int32)
+    want = ref.ref_flash_attention(q, k, v, causal=True)
+    rect = flash_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                           causal=True, q_chunk=32, kv_chunk=32)
+    bal = flash_attention_balanced(q, k, v, q_positions=pos, kv_positions=pos,
+                                   chunk=32)
+    np.testing.assert_allclose(np.asarray(rect), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(bal), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_balanced_schedule_odd_chunks_and_nondivisible():
+    from repro.models.layers import flash_attention_balanced
+
+    key = jax.random.PRNGKey(6)
+    B, S, KVH, G, hd = 1, 200, 1, 3, 16  # not a multiple of 2*chunk
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, KVH, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32) * 0.4
+    v = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32) * 0.4
+    pos = jnp.arange(S, dtype=jnp.int32)
+    want = ref.ref_flash_attention(q, k, v, causal=True)
+    got = flash_attention_balanced(q, k, v, q_positions=pos, kv_positions=pos,
+                                   chunk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,174 @@
+"""Per-arch smoke tests (reduced configs, CPU) + prefill/decode parity."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, load_smoke_config
+from repro.models import model as M
+
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+def f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+
+
+def make_batch(cfg, B, S, key):
+    kt, kf = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(kf, (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            kf, (B, S // cfg.enc_seq_divisor, cfg.d_model), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype)) * 0.02
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            kf, (B, cfg.n_patch_tokens, cfg.d_model), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    """One forward + one grad step on the reduced config: shapes + finite."""
+    cfg = load_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, S = 2, 64
+    batch = make_batch(cfg, B, S, key)
+    logits = M.forward(params, cfg, batch)
+    assert logits.shape == (B, S, M.pad_vocab(cfg))
+    assert bool(jnp.isfinite(logits).all())
+    loss, grads = jax.value_and_grad(M.loss_fn)(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_param_count_positive(arch):
+    cfg = load_smoke_config(arch)
+    n = cfg.n_params()
+    na = cfg.n_active_params()
+    assert n > 0 and 0 < na <= n
+
+
+PARITY_ARCHS = [
+    "qwen25_14b",      # dense GQA + qkv bias
+    "gemma3_27b",      # local ring + global full cache
+    "zamba2_7b",       # mamba + shared attention
+    "mamba2_370m",     # pure SSD recurrence
+    "whisper_large_v3",# enc-dec, cross attention
+    "grok1_314b",      # MoE
+]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """logits[S-1] from full forward == prefill(S-1) + one decode step."""
+    cfg = f32(load_smoke_config(arch))
+    if cfg.n_experts:
+        # token dropping differs between T=B*S and T=B*1 dispatch; use a
+        # no-drop capacity so parity is exact (drop behaviour is tested in
+        # test_smoke_forward_and_grad via the default capacity)
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S, key)
+    full = M.forward(params, cfg, batch)  # (B, S, V)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, : S - 1]
+    if cfg.family == "encdec":
+        pass  # frames unchanged: encoder context identical
+    if cfg.family == "vlm":
+        pre_batch["patches"] = batch["patches"]
+    _, caches = M.prefill(params, cfg, pre_batch, max_len=S + 8)
+    logits1, caches = M.decode_step(
+        params, cfg, batch["tokens"][:, S - 1 : S], caches
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits1[:, 0]), np.asarray(full[:, S - 1]), rtol=2e-4, atol=2e-4
+    )
+    assert int(caches["pos"]) == S
+
+
+def test_paged_decode_matches_full_when_no_eviction():
+    """AWRP bounded pool with capacity >= all pages must equal full-cache
+    decode exactly (the technique is lossless until eviction kicks in)."""
+    cfg = f32(load_smoke_config("gemma3_27b"))
+    cfg = dataclasses.replace(cfg, bounded_kv_pages=16, page_size=8)
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key)
+    B = 2
+    S = 24  # page-aligned (3 pages)
+    batch = make_batch(cfg, B, S, key)
+    _, caches_full = M.prefill(params, cfg, {"tokens": batch["tokens"]}, max_len=S + 8,
+                               kv_mode="full")
+    _, caches_paged = M.prefill(params, cfg, {"tokens": batch["tokens"]}, max_len=S + 8,
+                                kv_mode="paged")
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    lf, _ = M.decode_step(params, cfg, tok, caches_full, kv_mode="full")
+    lp, _ = M.decode_step(params, cfg, tok, caches_paged, kv_mode="paged")
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lp), rtol=2e-4, atol=2e-4)
+
+
+def test_paged_decode_evicts_and_stays_finite():
+    """Long decode with a tiny pool: AWRP evicts, logits stay finite, and the
+    resident set is bounded."""
+    cfg = f32(load_smoke_config("gemma3_27b"))
+    cfg = dataclasses.replace(cfg, bounded_kv_pages=3, page_size=4)
+    key = jax.random.PRNGKey(3)
+    params = M.init_params(cfg, key)
+    B, S = 1, 8  # 2 pages resident after prefill
+    batch = make_batch(cfg, B, S, key)
+    _, caches = M.prefill(params, cfg, {"tokens": batch["tokens"]}, max_len=64,
+                          kv_mode="paged")
+    tok = batch["tokens"][:, :1]
+    step = jax.jit(lambda t, c: M.decode_step(params, cfg, t, c, kv_mode="paged"))
+    for _ in range(24):  # crosses several page boundaries -> evictions
+        logits, caches = step(tok, caches)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits[:, :, : cfg.vocab], axis=-1).astype(jnp.int32)
+    pool = caches["blocks"]["t0"]  # a "local"? t0 is local; use global u-block
+    # find a paged pool in the tree (global layer position u2 in smoke pattern)
+    pool = caches["blocks"]["u2"]
+    resident = np.asarray(pool.page_start >= 0).sum(axis=-1)
+    assert (resident <= cfg.bounded_kv_pages).all()
+    # clock advanced once per decode step
+    assert int(pool.clock.reshape(-1)[0]) == 24 + 2  # prefill seeded 2 pages
+
+
+def test_awrp_victim_matches_host_oracle():
+    """Vectorized pool eviction == the numpy AWRP victim rule, bit-exact."""
+    from repro.cache.paged_kv import awrp_victim
+    from repro.core.policies import AWRP
+
+    rng = np.random.RandomState(0)
+    for _ in range(50):
+        P = rng.randint(2, 12)
+        clock = rng.randint(P + 1, 100)
+        f = rng.randint(1, 20, size=P).astype(np.int32)
+        r = rng.randint(0, clock, size=P).astype(np.int32)
+        # host oracle: same slot-array layout
+        host = AWRP(P)
+        host.blocks = np.arange(P, dtype=np.int64)
+        host.F = f.astype(np.int64)
+        host.R = r.astype(np.int64)
+        host.clock = clock
+        expect = host.victim_slot()
+        got = awrp_victim(
+            jnp.asarray(f)[None], jnp.asarray(r)[None],
+            jnp.asarray([clock], jnp.int32),
+            jnp.ones((1, P), bool), jnp.zeros((1, P), bool),
+        )
+        assert int(got[0]) == expect

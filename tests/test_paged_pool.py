@@ -1,0 +1,110 @@
+"""Property tests for the AWRP paged-KV pool (the paper's technique applied
+to serving) — invariants under arbitrary decode streams."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cache import paged_kv
+from repro.core.kv_policy import PAGE_POLICIES, page_victim
+
+
+def _drive(pool, steps, page_size, kvd, policy="awrp", seed=0):
+    rng = np.random.RandomState(seed)
+    for pos in range(steps):
+        nk = jnp.asarray(rng.randn(pool.f.shape[0], kvd), jnp.float32)
+        nv = jnp.asarray(rng.randn(pool.f.shape[0], kvd), jnp.float32)
+        pool = paged_kv.insert_token(pool, nk, nv, jnp.asarray(pos, jnp.int32),
+                                     page_size, policy=policy)
+        # synthetic attention mass: random but normalized per sequence
+        mass = rng.rand(pool.f.shape[0], pool.f.shape[1] * page_size)
+        mass = mass / mass.sum(-1, keepdims=True)
+        pool = paged_kv.score_update(pool, jnp.asarray(mass, jnp.float32),
+                                     page_size)
+    return pool
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    pages=st.integers(min_value=2, max_value=6),
+    page_size=st.integers(min_value=2, max_value=8),
+    steps=st.integers(min_value=1, max_value=60),
+    policy=st.sampled_from(PAGE_POLICIES),
+)
+def test_pool_invariants_under_decode_stream(pages, page_size, steps, policy):
+    B, kvd = 2, 8
+    pool = paged_kv.init_pool(B, pages, page_size, kvd, jnp.float32)
+    pool = _drive(pool, steps, page_size, kvd, policy=policy)
+    ps = np.asarray(pool.page_start)
+    f = np.asarray(pool.f)
+    r = np.asarray(pool.r)
+    clock = np.asarray(pool.clock)
+    resident = ps >= 0
+    # residency bounded and equals min(pages written, pool size)
+    pages_written = (steps + page_size - 1) // page_size
+    assert (resident.sum(-1) == min(pages_written, pages)).all()
+    # page starts are page-aligned and within the stream
+    assert (ps[resident] % page_size == 0).all()
+    assert (ps[resident] < steps).all()
+    # the OPEN page (latest) must always be resident — never evicted (pinned)
+    open_start = ((steps - 1) // page_size) * page_size
+    assert ((ps == open_start).sum(-1) == 1).all()
+    # clock ticks once per decode step
+    assert (clock == steps).all()
+    # paper metadata sanity: F >= 1 on residents, R <= clock
+    assert (f[resident] >= 1).all()
+    assert (r[resident] <= steps).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    P=st.integers(min_value=2, max_value=10),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_page_victim_policies_differ_and_are_valid(P, seed):
+    rng = np.random.RandomState(seed)
+    B = 3
+    f = jnp.asarray(rng.randint(1, 20, size=(B, P)), jnp.int32)
+    r = jnp.asarray(rng.randint(0, 50, size=(B, P)), jnp.int32)
+    starts = jnp.asarray(rng.randint(0, 1000, size=(B, P)), jnp.int32)
+    clock = jnp.asarray(rng.randint(51, 99, size=(B,)), jnp.int32)
+    pinned = jnp.zeros((B, P), bool)
+    for policy in PAGE_POLICIES:
+        v = np.asarray(page_victim(policy, f, r, starts, clock, pinned))
+        assert ((0 <= v) & (v < P)).all()
+    # lru victim == min r
+    v = np.asarray(page_victim("lru", f, r, starts, clock, pinned))
+    assert (np.asarray(r)[np.arange(B), v] == np.asarray(r).min(-1)).all()
+    # fifo victim == min page_start
+    v = np.asarray(page_victim("fifo", f, r, starts, clock, pinned))
+    assert (np.asarray(starts)[np.arange(B), v] == np.asarray(starts).min(-1)).all()
+
+
+def test_pool_eviction_matches_core_awrp_oracle():
+    """Drive a pool to eviction and check each eviction picks the same slot
+    the numpy AWRP weight rule would (metadata-level equivalence)."""
+    from repro.core.jax_policies import awrp_weights
+
+    B, pages, page_size, kvd = 1, 3, 4, 4
+    pool = paged_kv.init_pool(B, pages, page_size, kvd, jnp.float32)
+    rng = np.random.RandomState(1)
+    for pos in range(40):
+        prev = pool
+        nk = jnp.asarray(rng.randn(B, kvd), jnp.float32)
+        pool = paged_kv.insert_token(pool, nk, nk, jnp.asarray(pos, jnp.int32),
+                                     page_size)
+        mass = rng.rand(B, pages * page_size)
+        mass /= mass.sum()
+        pool = paged_kv.score_update(pool, jnp.asarray(mass, jnp.float32),
+                                     page_size)
+        if pos % page_size == 0 and pos >= pages * page_size:
+            # an eviction happened at this allocation: the evicted slot is
+            # where page_start changed; verify it was argmin W (excl. pinned)
+            changed = np.asarray(prev.page_start != pool.page_start)[0]
+            assert changed.sum() == 1
+            w = np.array(awrp_weights(prev.f, prev.r, prev.clock[:, None]))[0].copy()
+            pin = int(np.asarray(prev.open_slot)[0])
+            w[pin] = np.inf
+            assert int(np.argmin(w)) == int(np.flatnonzero(changed)[0])

@@ -1,0 +1,214 @@
+"""Unit + property tests for the replacement-policy layer (paper core)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    AWRP,
+    ARC,
+    CAR,
+    FIFO,
+    LFU,
+    LRU,
+    OPT,
+    POLICIES,
+    make_policy,
+    simulate,
+    sweep,
+)
+from repro.core.traces import paper_trace, trace_scan_mix, trace_zipf
+
+ALL = sorted(POLICIES)
+CAPACITY_BOUND = ["awrp", "wrp", "lru", "fifo", "lfu", "random", "arc", "car", "2q", "opt"]
+
+
+# ---------------------------------------------------------------------------
+# basic behaviour
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_cold_miss_then_hit(name):
+    p = make_policy(name, 4)
+    if isinstance(p, OPT):
+        p.prepare([1, 1])
+    assert p.access(1) is False
+    assert p.access(1) is True
+    assert p.hit_ratio == 0.5
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_capacity_never_exceeded(name):
+    rng = np.random.RandomState(0)
+    trace = rng.randint(0, 50, size=500)
+    p = make_policy(name, 8)
+    if isinstance(p, OPT):
+        p.prepare(trace)
+    for b in trace:
+        p.access(int(b))
+    assert len(p.resident_set()) <= 8
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_fits_entirely_no_capacity_misses(name):
+    """working set <= capacity -> only compulsory misses."""
+    trace = [0, 1, 2, 3] * 25
+    p = make_policy(name, 8)
+    if isinstance(p, OPT):
+        p.prepare(trace)
+    misses = sum(0 if p.access(b) else 1 for b in trace)
+    assert misses == 4
+
+
+def test_awrp_weight_function_matches_paper_eq1():
+    """W_i = F_i / (N - R_i), lazily evaluated at miss time."""
+    p = AWRP(2)
+    p.access(10)  # clock 1: F=1, R=1
+    p.access(11)  # clock 2: F=1, R=2
+    p.access(10)  # clock 3: hit -> F=2, R=3
+    # clock 4 miss: W(10) = 2/(4-3) = 2.0 ; W(11) = 1/(4-2) = 0.5 -> evict 11
+    p.access(12)
+    assert p.resident_set() == {10, 12}
+
+
+def test_awrp_prefers_frequent_over_recent_scan():
+    """A high-frequency block must survive a one-time scan (paper §1:
+    'pages with small frequency but better recency rank higher than pages
+    with lower recency as well as low frequency' — and vice versa here)."""
+    p = AWRP(3)
+    for _ in range(10):
+        p.access(1)  # F(1) = 10
+    p.access(2)
+    p.access(3)
+    p.access(4)  # miss: evicts min-W among {1,2,3}
+    assert 1 in p.resident_set()  # the hot block survives
+    assert 2 not in p.resident_set()  # oldest one-timer evicted
+
+
+def test_awrp_scan_resistance_beats_lru():
+    tr = trace_scan_mix(6000, hot_blocks=64, scan_blocks=400, seed=3)
+    a = simulate("awrp", tr, 96).hit_ratio
+    l = simulate("lru", tr, 96).hit_ratio
+    assert a > l
+
+
+def test_opt_dominates_everything():
+    tr = trace_zipf(3000, 300, 0.9, seed=7)
+    opt = simulate("opt", tr, 64).hit_ratio
+    for name in ("lru", "fifo", "awrp", "car", "arc", "lfu"):
+        assert opt >= simulate(name, tr, 64).hit_ratio - 1e-12
+
+
+def test_paper_qualitative_claims_hold_on_paper_trace():
+    """The reproduction gate: AWRP >= LRU and FIFO at every frame size of
+    Table 1, on the calibrated stand-in trace."""
+    tr = paper_trace()
+    caps = [30, 60, 90, 120, 150, 180, 210]
+    res = sweep(["lru", "fifo", "car", "awrp"], tr, caps)
+    for c in caps:
+        assert res["awrp"][c] >= res["lru"][c], c
+        assert res["awrp"][c] >= res["fifo"][c], c
+    # CAR parity band (paper: AWRP ~= CAR, small average edge either way)
+    mean_gap = np.mean([res["awrp"][c] - res["car"][c] for c in caps])
+    assert abs(mean_gap) < 0.05
+
+
+def test_set_associative_partitions_correctly():
+    tr = paper_trace()
+    r1 = simulate("awrp", tr, 120, num_sets=1)
+    r4 = simulate("awrp", tr, 120, num_sets=4)
+    assert r1.accesses == r4.accesses == len(tr)
+    # associativity changes the result but both are sane hit ratios
+    assert 0.2 < r4.hit_ratio < 0.95
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+traces_st = st.lists(st.integers(min_value=0, max_value=40), min_size=1, max_size=400)
+caps_st = st.integers(min_value=1, max_value=24)
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces_st, cap=caps_st)
+def test_property_resident_bound_and_stats(trace, cap):
+    for name in ("awrp", "lru", "fifo", "lfu", "arc", "car", "2q"):
+        p = make_policy(name, cap)
+        hits = sum(p.access(b) for b in trace)
+        assert len(p.resident_set()) <= cap
+        assert p.accesses == len(trace)
+        assert p.hits == hits
+        # last-accessed block must be resident under every demand-fill policy
+        assert trace[-1] in p.resident_set()
+
+
+@settings(max_examples=40, deadline=None)
+@given(trace=traces_st, cap=caps_st)
+def test_property_hit_iff_resident_before(trace, cap):
+    """access() returns True exactly when the block was resident."""
+    p = make_policy("awrp", cap)
+    for b in trace:
+        was_resident = b in p.resident_set()
+        assert p.access(b) == was_resident
+
+
+@settings(max_examples=30, deadline=None)
+@given(trace=traces_st, cap=st.integers(min_value=2, max_value=16))
+def test_property_awrp_wrp_identical_decisions(trace, cap):
+    """WRP (eager weights) and AWRP (lazy) must make identical decisions —
+    the paper's contribution is overhead, not policy, relative to WRP."""
+    a, w = make_policy("awrp", cap), make_policy("wrp", cap)
+    for b in trace:
+        assert a.access(b) == w.access(b)
+    assert a.resident_set() == w.resident_set()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    trace=st.lists(st.integers(min_value=0, max_value=30), min_size=1, max_size=300),
+    cap=st.integers(min_value=1, max_value=12),
+)
+def test_property_opt_is_upper_bound(trace, cap):
+    opt = simulate("opt", np.array(trace), cap).hits
+    for name in ("awrp", "lru", "fifo", "lfu", "arc", "car"):
+        assert simulate(name, np.array(trace), cap).hits <= opt
+
+
+def test_aawrp_adapts_and_stays_correct():
+    """A-AWRP (beyond paper): obeys the protocol and adapts its rung.
+
+    MEASURED NEGATIVE RESULT (EXPERIMENTS.md §Repro ablation): the adaptive
+    exponents LOSE to the paper's fixed eq. (1) (suite mean 60.96% vs
+    61.93%) — eq. (1)'s accumulated frequency already carries cross-phase
+    memory, and switching exponents mid-stream perturbs the ranking. The
+    test pins the bounded-loss envelope so a regression in the adaptation
+    logic (rather than its known cost) still fails."""
+    from repro.core.policies import AAWRP
+    from repro.core.traces import trace_zipf
+
+    zipf = trace_zipf(3000, 200, 1.1, seed=3)
+    loop = np.tile(np.arange(90), 34)[:3000]
+    trace = np.concatenate([zipf, loop, zipf[::-1], loop])
+    a = AAWRP(64)
+    hits_a = sum(a.access(int(b)) for b in trace)
+    assert len(a.resident_set()) <= 64
+    assert a.rung in (0, 1, 2)
+    p = make_policy("awrp", 64)
+    hits_p = sum(p.access(int(b)) for b in trace)
+    assert hits_a >= hits_p * 0.80, (hits_a, hits_p)  # bounded adaptation cost
+
+
+@settings(max_examples=25, deadline=None)
+@given(trace=traces_st, cap=st.integers(min_value=2, max_value=16))
+def test_property_aawrp_protocol(trace, cap):
+    from repro.core.policies import AAWRP
+
+    p = AAWRP(cap)
+    for b in trace:
+        was = b in p.resident_set()
+        assert p.access(b) == was
+    assert len(p.resident_set()) <= cap
+    assert trace[-1] in p.resident_set()

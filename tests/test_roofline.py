@@ -1,0 +1,103 @@
+"""Roofline machinery validation.
+
+1. XLA's cost_analysis counts while (scan) bodies ONCE — demonstrated here,
+   which is WHY the roofline uses the analytic model.
+2. The analytic FLOP model is cross-validated against cost_analysis on
+   scan-free configurations (n_repeats=1, 1 microbatch, no remat, single
+   chunk) where XLA's count is trustworthy.
+3. The HLO collective-bytes parser is validated on known collective programs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeSpec, load_smoke_config
+from repro.models import model as M
+from repro.roofline.analysis import collective_bytes
+from repro.roofline.analytic import MeshInfo, cell_costs
+
+
+def test_cost_analysis_counts_scan_once():
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=8)[0]
+
+    def unrolled(x, w):
+        for _ in range(8):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    f_scan = jax.jit(scanned).lower(x, w).compile().cost_analysis()["flops"]
+    f_unroll = jax.jit(unrolled).lower(x, w).compile().cost_analysis()["flops"]
+    assert f_unroll == pytest.approx(8 * f_scan, rel=0.01)
+
+
+@pytest.mark.parametrize("arch", ["qwen25_14b", "mamba2_370m", "grok1_314b"])
+def test_analytic_flops_matches_xla_on_scanfree_config(arch):
+    """Scan-free reduced config: analytic hlo_flops within 40% of XLA count
+    (analytic is deliberately simple: exact matmuls, approximate elementwise)."""
+    cfg = load_smoke_config(arch)
+    B, S = 2, 64
+    # make every scan length 1: single layer (or unit), single ssd chunk
+    pat = ("mamba",) if cfg.family == "ssm" else None
+    cfg = dataclasses.replace(
+        cfg, pattern=pat, n_repeats=1 if pat else 0, tail=(), n_layers=1,
+        ssm_chunk=S, remat="none", microbatches=1,
+        dtype="float32", param_dtype="float32",
+    )
+    shape = ShapeSpec("t", S, B, "prefill")  # forward only: cleanest count
+    params = M.abstract_params(cfg)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def fwd(p, b):
+        return M.forward(p, cfg, b)
+
+    ca = jax.jit(fwd).lower(params, batch).compile().cost_analysis()
+    xla_flops = float(ca["flops"])
+    a = cell_costs(cfg, shape, mesh=MeshInfo(batch_shards=1, model_shards=1),
+                   schedule_factor=2.0)  # rectangular flash == what we lower
+    # forward() (not prefill) has no kv collection; compare per-device totals
+    assert a["hlo_flops"] == pytest.approx(xla_flops, rel=0.40), (
+        a["hlo_flops"], xla_flops)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[16,256]{1,0} all-gather(bf16[1,256]{1,0} %x), replica_groups={{0,1}}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), replica_groups=[2,8]<=[16]
+  %cp = bf16[128]{0} collective-permute(bf16[128]{0} %w)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 256 * 2
+    assert got["all-reduce"] == 2 * 1024 * 4
+    assert got["reduce-scatter"] == 64 * 4 * 8  # result x group size
+    assert got["collective-permute"] == 128 * 2
+    assert got["total"] == sum(v for k, v in got.items() if k != "total")
+
+
+def test_collective_parser_on_real_sharded_program():
+    n = jax.device_count()
+    if n < 2:
+        pytest.skip("needs >1 device")
+    mesh = jax.make_mesh((n,), ("d",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x):
+        y = x @ x.T
+        return jax.lax.with_sharding_constraint(
+            y, NamedSharding(mesh, P(None, None)))
+
+    x = jax.ShapeDtypeStruct((n * 8, 64), jnp.float32,
+                             sharding=NamedSharding(mesh, P("d", None)))
+    hlo = jax.jit(f).lower(x).compile().as_text()
+    got = collective_bytes(hlo)
+    assert got["total"] > 0  # resharding emitted at least one collective
