@@ -1,21 +1,32 @@
 """Policy overhead: µs/access host-side (the paper's 'low overhead' claim —
-AWRP's lazy weights vs WRP's eager recompute) and device throughput of the
-vectorized policies (lax.scan over a trace)."""
+AWRP's lazy weights vs WRP's eager recompute), device throughput of the
+vectorized policies (lax.scan over a trace), and the batched sweep engine's
+whole-grid speedup over the host loop (the Table-1 acceptance number)."""
 
 from __future__ import annotations
 
+try:  # runs both as `python benchmarks/policy_overhead.py` and as a module
+    from benchmarks.xla_env import enable_fast_cpu_scan
+except ImportError:
+    from xla_env import enable_fast_cpu_scan
+enable_fast_cpu_scan()
+
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_policy
-from repro.core.jax_policies import JAX_POLICIES, simulate_trace
+from repro.core.jax_policies import (
+    JAX_POLICIES,
+    simulate_trace,
+    simulate_trace_batched,
+)
 from repro.core.traces import trace_zipf
 
 TRACE = trace_zipf(20_000, 2_000, 0.9, seed=5)
 CAP = 512
+SWEEP_CAPS = [30, 60, 90, 120, 150, 180, 210, 240]  # the Table-1 frame sizes
 
 
 def host_us_per_access(policy: str, trace, cap) -> float:
@@ -38,12 +49,60 @@ def device_us_per_access(policy: str, trace, cap) -> float:
     return (time.perf_counter() - t0) / 3 / len(trace) * 1e6
 
 
-def run(out_lines=None):
+def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000):
+    """Whole Table-1 grid (all device policies x all frame sizes) as ONE
+    jitted program vs the host oracle loop, plus a kernel-routed run — the
+    Pallas awrp_select_rows path the sweep exercises on TPU."""
+    tr = trace_zipf(n_accesses, 2_000, 0.9, seed=5)
+    grid = len(JAX_POLICIES) * len(SWEEP_CAPS)
+
+    def timed(**kw):
+        h = simulate_trace_batched(tr, JAX_POLICIES, SWEEP_CAPS, **kw)
+        h.block_until_ready()  # compile
+        t0 = time.perf_counter()
+        h = simulate_trace_batched(tr, JAX_POLICIES, SWEEP_CAPS, **kw)
+        h.block_until_ready()
+        return time.perf_counter() - t0, np.asarray(h[0].sum(-1))
+
+    dev_s, counts = timed()
+    ker_s, ker_counts = timed(use_kernel=True)
+
+    t0 = time.perf_counter()
+    host_counts = np.zeros((len(JAX_POLICIES), len(SWEEP_CAPS)), dtype=np.int64)
+    for pi, pol in enumerate(JAX_POLICIES):
+        for ci, cap in enumerate(SWEEP_CAPS):
+            p = make_policy(pol, cap)
+            for b in tr:
+                p.access(int(b))
+            host_counts[pi, ci] = p.hits
+    host_s = time.perf_counter() - t0
+
+    parity = (counts == host_counts).all() and (ker_counts == host_counts).all()
+    print(f"== batched sweep engine: {grid}-config Table-1 grid, "
+          f"{n_accesses} accesses ==")
+    print(f"host oracle loop : {host_s:8.3f}s")
+    print(f"one-jit grid     : {dev_s:8.3f}s  ({host_s / dev_s:5.1f}x)")
+    print(f"  + Pallas kernel: {ker_s:8.3f}s  ({host_s / ker_s:5.1f}x, "
+          f"interpret mode off-TPU)")
+    print(f"hit counts vs host oracles: {'bit-identical' if parity else 'MISMATCH'}")
+    if not parity:
+        raise AssertionError("batched sweep diverged from host oracles")
+    if out_lines is not None:
+        out_lines.append(
+            f"batched_sweep_grid,{1e6 * dev_s / n_accesses:.2f},"
+            f"{host_s / dev_s:.1f}x_vs_host")
+        out_lines.append(
+            f"batched_sweep_grid_kernel,{1e6 * ker_s / n_accesses:.2f},"
+            f"{host_s / ker_s:.1f}x_vs_host")
+
+
+def run(out_lines=None, smoke: bool = False):
+    trace = TRACE[:5_000] if smoke else TRACE
     print("== policy overhead ==")
     print(f"{'policy':>8} | host us/access | device us/access (lax.scan)")
     for pol in ("awrp", "wrp", "lru", "fifo", "lfu", "arc", "car", "2q"):
-        host = host_us_per_access(pol, TRACE, CAP)
-        dev = (device_us_per_access(pol, TRACE, CAP)
+        host = host_us_per_access(pol, trace, CAP)
+        dev = (device_us_per_access(pol, trace, CAP)
                if pol in JAX_POLICIES else float("nan"))
         print(f"{pol:>8} | {host:14.2f} | {dev:14.2f}")
         if out_lines is not None:
@@ -51,11 +110,12 @@ def run(out_lines=None):
             if pol in JAX_POLICIES:
                 out_lines.append(f"policy_device_{pol},{dev:.2f},us_per_access")
     # the paper's overhead claim: AWRP (lazy) cheaper than WRP (eager)
-    a = host_us_per_access("awrp", TRACE, CAP)
-    w = host_us_per_access("wrp", TRACE, CAP)
+    a = host_us_per_access("awrp", trace, CAP)
+    w = host_us_per_access("wrp", trace, CAP)
     print(f"AWRP lazy-weight speedup over WRP: {w / a:.2f}x")
     if out_lines is not None:
         out_lines.append(f"awrp_vs_wrp_speedup,{a:.2f},{w / a:.2f}x")
+    batched_sweep_speedup(out_lines, n_accesses=10_000 if smoke else 100_000)
 
 
 if __name__ == "__main__":

@@ -1,20 +1,58 @@
 """Benchmark entrypoint: one function per paper table / framework artifact.
-Prints a ``name,us_per_call,derived`` CSV summary at the end."""
+Prints a ``name,us_per_call,derived`` CSV summary at the end (and writes it
+to ``--csv PATH`` for CI artifact upload).  Exits non-zero when any section
+fails, so CI bench jobs gate regressions instead of always passing.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/run.py                # full pass
+    PYTHONPATH=src python benchmarks/run.py --smoke        # reduced CI pass
+    PYTHONPATH=src python benchmarks/run.py --sections table1,policy_overhead
+"""
 
 from __future__ import annotations
 
+import os
 import sys
+
+# make `python benchmarks/run.py` work from any cwd (script-mode sys.path
+# holds benchmarks/, not the repo root that anchors the benchmarks package)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.xla_env import enable_fast_cpu_scan  # noqa: E402
+
+enable_fast_cpu_scan()  # must run before anything imports jax
+
+import argparse
+import inspect
 import traceback
 
+#: sections cheap enough for the CI bench-smoke job (the rest stress model /
+#: serving layers and take minutes even at reduced sizes)
+SMOKE_SECTIONS = ("table1", "trace_suite", "policy_overhead", "kernel_bench")
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes + cheap section subset (CI gate)")
+    ap.add_argument("--csv", metavar="PATH", default=None,
+                    help="also write the CSV summary to PATH")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated section keys to run (default: all, "
+                    "or SMOKE_SECTIONS with --smoke)")
+    args = ap.parse_args(argv)
+
     out_lines = []
     sections = []
 
     def section(name, fn):
         print(f"\n{'='*72}\n{name}\n{'='*72}")
         try:
-            fn(out_lines)
+            if "smoke" in inspect.signature(fn).parameters:
+                fn(out_lines, smoke=args.smoke)
+            else:
+                fn(out_lines)
             sections.append((name, "ok"))
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
@@ -32,21 +70,46 @@ def main() -> None:
         trace_suite,
     )
 
-    section("Table 1 reproduction (paper §4.2)", table1.run)
-    section("Trace suite (generalization)", trace_suite.run)
-    section("AWRP(alpha,beta) ablation (beyond paper, its §5 direction)",
-            awrp_ablation.run)
-    section("Policy overhead (paper §3 overhead claim)", policy_overhead.run)
-    section("Kernel bench", kernel_bench.run)
-    section("Bounded-KV serving quality (AWRP vs baselines)",
-            serve_quality_bench.run)
-    section("Expert cache (MoE serving)", expert_cache_bench.run)
-    section("Gradient compression", grad_compress_bench.run)
-    section("Roofline report (from dry-run artifacts)", roofline_report.run)
+    registry = {
+        "table1": ("Table 1 reproduction (paper §4.2)", table1.run),
+        "trace_suite": ("Trace suite (generalization)", trace_suite.run),
+        "awrp_ablation": (
+            "AWRP(alpha,beta) ablation (beyond paper, its §5 direction)",
+            awrp_ablation.run),
+        "policy_overhead": (
+            "Policy overhead + batched sweep engine (paper §3 overhead claim)",
+            policy_overhead.run),
+        "kernel_bench": ("Kernel bench", kernel_bench.run),
+        "serve_quality": (
+            "Bounded-KV serving quality (AWRP vs baselines)",
+            serve_quality_bench.run),
+        "expert_cache": ("Expert cache (MoE serving)", expert_cache_bench.run),
+        "grad_compress": ("Gradient compression", grad_compress_bench.run),
+        "roofline": ("Roofline report (from dry-run artifacts)",
+                     roofline_report.run),
+    }
+
+    if args.sections:
+        keys = [k.strip() for k in args.sections.split(",") if k.strip()]
+        unknown = [k for k in keys if k not in registry]
+        if unknown:
+            ap.error(f"unknown sections {unknown}; have {sorted(registry)}")
+    elif args.smoke:
+        keys = list(SMOKE_SECTIONS)
+    else:
+        keys = list(registry)
+
+    for key in keys:
+        section(*registry[key])
 
     print(f"\n{'='*72}\nCSV summary (name,us_per_call,derived)\n{'='*72}")
     for line in out_lines:
         print(line)
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write("name,us_per_call,derived\n")
+            fh.write("\n".join(out_lines) + "\n")
+        print(f"(written to {args.csv})")
     print()
     for name, status in sections:
         print(f"[{status}] {name}")

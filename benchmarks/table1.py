@@ -1,8 +1,18 @@
 """Table 1 reproduction: hit ratio of LRU / FIFO / CAR / AWRP over the
 paper's frame sizes, on the calibrated stand-in trace (+ the paper's own
-digits for side-by-side comparison)."""
+digits for side-by-side comparison).
+
+The LRU/FIFO/AWRP rows run through the batched device engine (one jitted
+program for the whole policy x frame-size grid); CAR is pointer-based and
+stays on the host oracle path.  ``sweep()`` partitions automatically."""
 
 from __future__ import annotations
+
+try:  # runs both as `python benchmarks/table1.py` and as a module
+    from benchmarks.xla_env import enable_fast_cpu_scan
+except ImportError:
+    from xla_env import enable_fast_cpu_scan
+enable_fast_cpu_scan()
 
 import numpy as np
 

@@ -1,8 +1,16 @@
 """Multi-trace policy evaluation (the honest generalization check behind the
 single calibrated trace): real-program traces + locality models, AWRP vs
-every implemented policy."""
+every implemented policy.  ``sweep()`` runs the device-capable policies
+(lru/fifo/lfu/awrp) through the batched engine per trace; arc/car/2q/opt
+stay on the host oracle path."""
 
 from __future__ import annotations
+
+try:  # runs both as `python benchmarks/trace_suite.py` and as a module
+    from benchmarks.xla_env import enable_fast_cpu_scan
+except ImportError:
+    from xla_env import enable_fast_cpu_scan
+enable_fast_cpu_scan()
 
 import numpy as np
 
@@ -32,14 +40,17 @@ def suite():
     }
 
 
-def run(out_lines=None):
+def run(out_lines=None, smoke: bool = False):
     print("== trace suite: mean hit ratio over 4 cache sizes (10/25/50/75% of "
           "working set) ==")
     header = f"{'trace':>14} | " + " | ".join(f"{p:>6}" for p in POLICIES)
     print(header)
     print("-" * len(header))
     agg = {p: [] for p in POLICIES}
-    for name, tr in suite().items():
+    traces = suite()
+    if smoke:  # one real-program trace + one locality model
+        traces = {k: traces[k] for k in ("mergesort", "zipf_a0.8")}
+    for name, tr in traces.items():
         u = len(np.unique(tr))
         caps = sorted({max(4, int(u * f)) for f in (0.1, 0.25, 0.5, 0.75)})
         res = sweep(POLICIES, tr, caps)

@@ -1,0 +1,24 @@
+"""Opt-in XLA tuning for benchmark entrypoints.
+
+``--xla_cpu_use_thunk_runtime=false`` selects the legacy XLA:CPU runtime,
+which updates ``lax.scan`` carries in place; the thunk runtime copies every
+scatter operand per step, which multiplies the batched sweep engine's
+per-step cost ~4x (measured in benchmarks/policy_overhead.py).  Library code
+stays flag-agnostic — only the benchmark entrypoints opt in, and only if the
+operator hasn't already configured the knob.  Must run before jax imports.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_FLAG = "--xla_cpu_use_thunk_runtime=false"
+
+
+def enable_fast_cpu_scan() -> None:
+    if "jax" in sys.modules:
+        return  # too late — jax already read XLA_FLAGS
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_cpu_use_thunk_runtime" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}".strip()

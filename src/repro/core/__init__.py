@@ -19,3 +19,27 @@ from .policies import (  # noqa: F401
 )
 from .simulator import SimResult, hit_ratio_table, simulate, sweep  # noqa: F401
 from .traces import TRACES  # noqa: F401
+
+#: device-layer exports, resolved lazily (PEP 562) so host-only consumers of
+#: the numpy oracles never pay the jax import
+_DEVICE_EXPORTS = (
+    "JAX_POLICIES",
+    "POLICY_IDS",
+    "CacheState",
+    "SetCacheState",
+    "access",
+    "access_sets",
+    "init_state",
+    "init_set_state",
+    "simulate_trace",
+    "simulate_trace_sets",
+    "simulate_trace_batched",
+)
+
+
+def __getattr__(name):
+    if name in _DEVICE_EXPORTS:
+        from . import jax_policies
+
+        return getattr(jax_policies, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

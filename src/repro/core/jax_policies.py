@@ -14,6 +14,22 @@ API::
     # batched (e.g. one cache per sequence in a serving batch):
     states, hits = jax.vmap(partial(access, policy="awrp"))(states, blocks)
 
+Batched sweep engine (the Table-1 grid as ONE device program)::
+
+    # (n_traces, n_policies, n_caps, T) hit bits, single jit + lax.scan:
+    hits = simulate_trace_batched(traces, ["awrp", "lru"], [30, 60, 240],
+                                  num_sets=4)
+
+The engine's state is set-associative: per-config arrays of shape
+``(num_sets, ways)`` with set index ``block % num_sets``, and every config in
+the (trace, policy, capacity) grid flattened onto one leading batch axis.
+Smaller capacities are padded to the widest config's ``ways`` with dead lanes
+that are masked out of both the first-empty fill and the victim argmin.
+Batching is explicit (flattened grid) rather than nested ``vmap`` so AWRP
+victim selection can route through the Pallas kernel
+(``repro.kernels.awrp_select_rows``) in its native ``(B, P)`` layout — one
+kernel invocation per trace step covers the entire grid.
+
 Decision parity with ``repro.core.policies`` oracles is property-tested
 bit-exactly (same float32 weight arithmetic, same first-index argmin).
 
@@ -24,7 +40,7 @@ their data-dependent list surgery does not vectorize; see DESIGN.md §2.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,11 +54,22 @@ __all__ = [
     "awrp_weights",
     "victim_slot",
     "JAX_POLICIES",
+    "POLICY_IDS",
+    "SetCacheState",
+    "init_set_state",
+    "access_sets",
+    "simulate_trace_sets",
+    "simulate_trace_batched",
 ]
 
 INT_MAX = np.iinfo(np.int32).max
 
 JAX_POLICIES = ("awrp", "lru", "fifo", "lfu")
+
+#: stable integer encoding of the device policies (the batched engine's
+#: policy axis); consumed by name via ``_make_masks``, so the numbering is
+#: arbitrary but must stay stable within a jitted program.
+POLICY_IDS = {name: i for i, name in enumerate(JAX_POLICIES)}
 
 
 class CacheState(NamedTuple):
@@ -110,7 +137,9 @@ def access(
     has_empty = jnp.any(empty)
     first_empty = jnp.argmax(empty)
 
-    victim = victim_slot(state, policy)
+    # victim selection sees the incremented clock, as the host oracle does
+    # (AWRP's dt = N - R_i uses the clock of the access being served)
+    victim = victim_slot(state._replace(clock=clock), policy)
     slot = jnp.where(is_hit, hit_slot, jnp.where(has_empty, first_empty, victim))
 
     new_f = jnp.where(is_hit, state.f[slot] + 1, 1).astype(jnp.int32)
@@ -138,3 +167,336 @@ def simulate_trace(
 
     _, hits = jax.lax.scan(step, init_state(capacity), trace.astype(jnp.int32))
     return hits
+
+
+# ---------------------------------------------------------------------------
+# Batched set-associative sweep engine
+# ---------------------------------------------------------------------------
+#
+# Engineering notes (benchmarked on CPU jax; see benchmarks/policy_overhead.py):
+#
+#  * State is three int32 planes — blocks / F / R — where R doubles as the
+#    FIFO insertion clock (FIFO simply freezes R on hits).  Fewer planes =
+#    fewer bytes the scan carry touches per step, which is the cost floor.
+#  * Empty-lane fill is FOLDED INTO the victim key: an empty lane has
+#    F = R = 0, so its key (weight 0 / recency 0 / frequency 0) beats every
+#    occupied lane under all four policies and ties break to the lowest lane
+#    index — exactly the host oracles' first-empty fill order.  No separate
+#    first-empty reduction.
+#  * No argmin/argmax anywhere: XLA CPU lowers argmin to a slow scalar
+#    reduce (~30x worse than min on float32).  Every selection is a chain of
+#    vectorizable min-reductions; AWRP's float32 weights are compared by
+#    their bit patterns (non-negative IEEE floats order identically to their
+#    int32 bits), which is also how the Pallas rows kernel does it.
+#  * The decision ordering is bit-identical to the host oracles either way —
+#    property-tested in tests/test_batched_sweep.py.
+
+
+class SetCacheState(NamedTuple):
+    """Set-associative cache state.  Leading axes are free batch axes; the
+    batched engine uses ``(B, num_sets, ways)`` with B = the flattened
+    (trace, policy, capacity) grid.  ``blocks == -1`` marks an empty lane;
+    dead lanes (capacity padding) are identified by a mask in the engine,
+    never by a sentinel."""
+
+    blocks: jax.Array  # (..., S, W) int32, -1 = empty
+    f: jax.Array  # (..., S, W) int32 frequency counters
+    r: jax.Array  # (..., S, W) int32 recency clock (insertion clock for FIFO)
+    clock: jax.Array  # (..., S) int32 per-set access clock N
+
+
+def init_set_state(
+    capacity: int, num_sets: int = 1, *, max_ways: int | None = None
+) -> SetCacheState:
+    """State for one set-associative cache: ``num_sets`` independent policy
+    instances of ``capacity // num_sets`` ways each (the host simulator's
+    mapping).  ``max_ways`` pads the ways axis for mixed-capacity batching."""
+    if capacity % num_sets:
+        raise ValueError(f"capacity {capacity} not divisible by num_sets {num_sets}")
+    ways = capacity // num_sets
+    W = ways if max_ways is None else max_ways
+    if W < ways:
+        raise ValueError(f"max_ways {W} < ways {ways}")
+    return SetCacheState(
+        blocks=jnp.full((num_sets, W), -1, dtype=jnp.int32),
+        f=jnp.zeros((num_sets, W), dtype=jnp.int32),
+        r=jnp.zeros((num_sets, W), dtype=jnp.int32),
+        clock=jnp.zeros((num_sets,), dtype=jnp.int32),
+    )
+
+
+class _GridMasks(NamedTuple):
+    """Per-row constants of the flattened grid (closed over by the scan)."""
+
+    lru_or_fifo: jax.Array  # (B, 1) bool
+    lfu: jax.Array  # (B, 1) bool
+    awrp_row: jax.Array  # (B,) bool
+    fifo_row: jax.Array  # (B,) bool
+    dead: jax.Array  # (B, W) bool — capacity-padding lanes
+    iota: jax.Array  # (1, W) int32 lane indices
+
+
+def _make_masks(pids: np.ndarray, ways_b: np.ndarray, W: int) -> _GridMasks:
+    pids = np.asarray(pids)
+    return _GridMasks(
+        lru_or_fifo=jnp.asarray(
+            (pids == POLICY_IDS["lru"]) | (pids == POLICY_IDS["fifo"])
+        )[:, None],
+        lfu=jnp.asarray(pids == POLICY_IDS["lfu"])[:, None],
+        awrp_row=jnp.asarray(pids == POLICY_IDS["awrp"]),
+        fifo_row=jnp.asarray(pids == POLICY_IDS["fifo"]),
+        dead=jnp.asarray(~(np.arange(W)[None, :] < np.asarray(ways_b)[:, None])),
+        iota=jnp.arange(W, dtype=jnp.int32)[None, :],
+    )
+
+
+def _row_step(
+    row_blocks: jax.Array,  # (B, W) int32
+    row_f: jax.Array,  # (B, W) int32
+    row_r: jax.Array,  # (B, W) int32
+    clk: jax.Array,  # (B,) int32 — this access's clock value per row
+    block: jax.Array,  # (B,) int32
+    masks: _GridMasks,
+    use_kernel: bool,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Shared per-access decision logic -> (slot, is_hit, new_f, new_r)."""
+    W = row_blocks.shape[-1]
+    iota = masks.iota
+
+    # hit detection: one vectorized min-reduce (W = miss sentinel)
+    match = row_blocks == block[:, None]
+    hit_k = jnp.min(jnp.where(match, iota, W), axis=-1)
+    is_hit = hit_k < W
+
+    # victim selection (also performs empty-lane fill; see notes above).
+    # stage 1: policy-selected primary key, min over lanes
+    if use_kernel:
+        from repro.kernels.ops import awrp_select_rows
+
+        v_awrp = awrp_select_rows(
+            row_f, row_r, clk, (~masks.dead).astype(jnp.int32)
+        )
+        prim = jnp.where(masks.lfu, row_f, row_r)  # awrp rows: unused filler
+    else:
+        w = row_f.astype(jnp.float32) / jnp.maximum(
+            clk[:, None] - row_r, 1
+        ).astype(jnp.float32)
+        wbits = jax.lax.bitcast_convert_type(w, jnp.int32)
+        prim = jnp.where(
+            masks.lru_or_fifo, row_r, jnp.where(masks.lfu, row_f, wbits)
+        )
+    prim = jnp.where(masks.dead, INT_MAX, prim)
+    m1 = jnp.min(prim, axis=-1)
+    # stage 2: tie-break key (recency for LFU, lane index otherwise)
+    sec = jnp.where(masks.lfu, row_r, iota)
+    k2 = jnp.where(prim == m1[:, None], sec, INT_MAX)
+    m2 = jnp.min(k2, axis=-1)
+    # stage 3: first lane achieving (m1, m2)
+    victim = jnp.min(jnp.where(k2 == m2[:, None], iota, W), axis=-1)
+    if use_kernel:
+        victim = jnp.where(masks.awrp_row, v_awrp, victim)
+
+    slot = jnp.where(is_hit, hit_k, victim)
+    old_f = jnp.take_along_axis(row_f, slot[:, None], -1)[:, 0]
+    old_r = jnp.take_along_axis(row_r, slot[:, None], -1)[:, 0]
+    new_f = jnp.where(is_hit, old_f + 1, 1).astype(jnp.int32)
+    # FIFO keeps its insertion clock in R: freeze R on hits for FIFO rows
+    new_r = jnp.where(is_hit & masks.fifo_row, old_r, clk).astype(jnp.int32)
+    return slot, is_hit, new_f, new_r
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy_ids", "ways", "num_sets", "use_kernel", "unroll"),
+)
+def _simulate_batched_impl(
+    traces: jax.Array,  # (N, T) int32
+    policy_ids: Tuple[int, ...],
+    ways: Tuple[int, ...],  # per-capacity ways
+    num_sets: int,
+    use_kernel: bool,
+    unroll: int,
+) -> jax.Array:
+    N, T = traces.shape
+    P, C = len(policy_ids), len(ways)
+    PC = P * C
+    B = N * PC
+    W = max(ways)
+    if use_kernel:
+        W += (-W) % 128  # pre-align lanes so the kernel wrapper's pad is a no-op
+    bidx = jnp.arange(B)
+
+    # grid flattening: b = (n*P + p)*C + c  (capacity axis fastest)
+    pids = np.tile(np.repeat(np.asarray(policy_ids, np.int32), C), N)
+    ways_b = np.tile(np.asarray(ways, np.int32), N * P)
+    masks = _make_masks(pids, ways_b, W)
+
+    xs = traces.T.astype(jnp.int32)  # (T, N)
+
+    if num_sets == 1:
+        # fast path: no set axis, clock derived from the step index (every
+        # access hits the single set, so per-set clock == global step count)
+        clks = jnp.arange(1, T + 1, dtype=jnp.int32)
+
+        def step1(carry, xs_t):
+            blocks, f, r = carry
+            block_n, clk_s = xs_t
+            block = jnp.repeat(block_n, PC)
+            clk = jnp.broadcast_to(clk_s, (B,))
+            slot, is_hit, new_f, new_r = _row_step(
+                blocks, f, r, clk, block, masks, use_kernel
+            )
+            carry = (
+                blocks.at[bidx, slot].set(block),
+                f.at[bidx, slot].set(new_f),
+                r.at[bidx, slot].set(new_r),
+            )
+            return carry, is_hit
+
+        carry0 = (
+            jnp.full((B, W), -1, dtype=jnp.int32),
+            jnp.zeros((B, W), dtype=jnp.int32),
+            jnp.zeros((B, W), dtype=jnp.int32),
+        )
+        _, hits = jax.lax.scan(step1, carry0, (xs, clks), unroll=unroll)
+    else:
+
+        def stepS(state, block_n):
+            block = jnp.repeat(block_n, PC)
+            sid = block % num_sets
+            clk = state.clock[bidx, sid] + 1
+            slot, is_hit, new_f, new_r = _row_step(
+                state.blocks[bidx, sid],
+                state.f[bidx, sid],
+                state.r[bidx, sid],
+                clk,
+                block,
+                masks,
+                use_kernel,
+            )
+            state = SetCacheState(
+                blocks=state.blocks.at[bidx, sid, slot].set(block),
+                f=state.f.at[bidx, sid, slot].set(new_f),
+                r=state.r.at[bidx, sid, slot].set(new_r),
+                clock=state.clock.at[bidx, sid].set(clk),
+            )
+            return state, is_hit
+
+        state0 = SetCacheState(
+            blocks=jnp.full((B, num_sets, W), -1, dtype=jnp.int32),
+            f=jnp.zeros((B, num_sets, W), dtype=jnp.int32),
+            r=jnp.zeros((B, num_sets, W), dtype=jnp.int32),
+            clock=jnp.zeros((B, num_sets), dtype=jnp.int32),
+        )
+        _, hits = jax.lax.scan(stepS, state0, xs, unroll=unroll)
+
+    # (T, B) -> (N, P, C, T)
+    return jnp.moveaxis(hits, 0, -1).reshape(N, P, C, T)
+
+
+def simulate_trace_batched(
+    traces,
+    policies: Sequence[str],
+    capacities: Sequence[int],
+    *,
+    num_sets: int = 1,
+    use_kernel: bool | None = None,
+    unroll: int = 1,
+) -> jax.Array:
+    """Run the full (trace, policy, capacity) grid as ONE jitted program.
+
+    Args:
+      traces: ``(T,)`` or ``(N, T)`` non-negative block ids (equal lengths —
+        pad/trim on the host if needed; padding would perturb cache state).
+      policies: device policy names (subset of ``JAX_POLICIES``).
+      capacities: total cache capacities; each must divide by ``num_sets``.
+        Mixed sizes batch together — smaller caches get dead padding lanes
+        masked out of both fill and eviction.
+      num_sets: set-associative mapping ``set = block % num_sets`` (the host
+        simulator's convention); per-set clocks match one host policy
+        instance per set.
+      use_kernel: route AWRP victim selection through the Pallas rows kernel
+        (``repro.kernels.awrp_select_rows``).  Default: True on TPU (kernel
+        runs native), False elsewhere — interpret-mode emulation adds
+        per-step overhead the inline bit-pattern min-reduction avoids.
+        Decisions are identical either way (property-tested).
+      unroll: ``lax.scan`` unroll factor.
+
+    Returns:
+      bool array ``(n_traces, n_policies, n_capacities, T)`` of per-access
+      hits, bit-identical to the host oracles' decisions.
+    """
+    tr = np.asarray(traces)
+    if tr.ndim == 1:
+        tr = tr[None, :]
+    if tr.ndim != 2:
+        raise ValueError(f"traces must be (T,) or (N, T), got shape {tr.shape}")
+    if tr.size and (tr.min() < 0 or tr.max() > INT_MAX):
+        raise ValueError(
+            "block ids must fit int32 (0 <= id <= 2**31-1); rebase or hash "
+            "the address space first"
+        )
+    policies = tuple(policies)
+    capacities = tuple(int(c) for c in capacities)
+    unknown = [p for p in policies if p not in POLICY_IDS]
+    if unknown:
+        raise ValueError(f"not device policies: {unknown}; have {JAX_POLICIES}")
+    if not policies or not capacities:
+        raise ValueError("need at least one policy and one capacity")
+    ways = []
+    for c in capacities:
+        if c % num_sets:
+            raise ValueError(f"capacity {c} not divisible by num_sets {num_sets}")
+        ways.append(c // num_sets)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    return _simulate_batched_impl(
+        jnp.asarray(tr, dtype=jnp.int32),
+        tuple(POLICY_IDS[p] for p in policies),
+        tuple(ways),
+        int(num_sets),
+        bool(use_kernel),
+        int(unroll),
+    )
+
+
+def simulate_trace_sets(
+    trace, capacity: int, *, policy: str = "awrp", num_sets: int = 1,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Single-config set-associative trace simulation (batched engine, B=1)."""
+    hits = simulate_trace_batched(
+        np.asarray(trace)[None, :], (policy,), (capacity,),
+        num_sets=num_sets, use_kernel=use_kernel,
+    )
+    return hits[0, 0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "use_kernel"))
+def access_sets(
+    state: SetCacheState, block: jax.Array, *, policy: str = "awrp",
+    use_kernel: bool = False,
+) -> Tuple[SetCacheState, jax.Array]:
+    """One access against a single ``(num_sets, ways)`` state (incremental
+    API, e.g. a serving-side set-associative pool).  All lanes are live; for
+    mixed-capacity batches use ``simulate_trace_batched``."""
+    if policy not in POLICY_IDS:
+        raise ValueError(f"unknown device policy {policy!r}; have {JAX_POLICIES}")
+    num_sets, W = state.blocks.shape
+    masks = _make_masks(
+        np.asarray([POLICY_IDS[policy]]), np.asarray([W]), W
+    )
+    block = jnp.asarray(block, dtype=jnp.int32)[None]
+    sid = block % num_sets
+    clk = state.clock[sid] + 1
+    slot, is_hit, new_f, new_r = _row_step(
+        state.blocks[sid], state.f[sid], state.r[sid], clk, block, masks,
+        use_kernel,
+    )
+    state = SetCacheState(
+        blocks=state.blocks.at[sid, slot].set(block),
+        f=state.f.at[sid, slot].set(new_f),
+        r=state.r.at[sid, slot].set(new_r),
+        clock=state.clock.at[sid].set(clk),
+    )
+    return state, is_hit[0]

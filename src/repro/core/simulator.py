@@ -7,9 +7,17 @@ configuration).
 
 Two execution paths:
   * host path: any policy from ``repro.core.policies`` (numpy / pure python);
-  * device path: vectorized policies from ``repro.core.jax_policies`` driven
-    by ``jax.lax.scan`` (used to prove the policy runs inside jitted TPU
-    programs, and as the oracle-vs-device property test target).
+    this is the ORACLE — the ground truth every device path is validated
+    against;
+  * device path: the batched sweep engine in ``repro.core.jax_policies`` —
+    the whole (policy, capacity) grid of a ``sweep()`` call runs as one
+    jitted ``lax.scan`` program, bit-identical to the oracle decisions.
+
+``sweep(device="auto")`` (the default) partitions the requested policies:
+every device-capable policy (``JAX_POLICIES``) goes through the batched
+engine in a single program, the pointer-based rest (ARC/CAR/2Q/OPT/...) run
+on the host loop.  ``device=False`` forces the host path for everything;
+``device=True`` requires every policy to be device-capable.
 """
 
 from __future__ import annotations
@@ -84,12 +92,53 @@ def sweep(
     *,
     num_sets: int = 1,
     block_size: int = 1,
+    device: bool | str = "auto",
+    use_kernel: bool | None = None,
 ) -> Dict[str, Dict[int, float]]:
-    """hit-ratio[policy][capacity] — the shape of the paper's Table 1."""
-    out: Dict[str, Dict[int, float]] = {}
-    for p in policies:
-        out[p] = {}
-        for c in capacities:
+    """hit-ratio[policy][capacity] — the shape of the paper's Table 1.
+
+    ``device="auto"`` runs every device-capable policy's whole capacity row
+    inside one jitted batched program (see module docstring); hit ratios are
+    bit-identical to the host path either way."""
+    policies = list(policies)
+    caps = [int(c) for c in capacities]
+    if device == "auto":
+        from .jax_policies import JAX_POLICIES
+
+        dev_pols = [p for p in policies if p in JAX_POLICIES]
+    elif device:
+        from .jax_policies import JAX_POLICIES
+
+        bad = [p for p in policies if p not in JAX_POLICIES]
+        if bad:
+            raise ValueError(
+                f"device=True but {bad} have no device implementation; "
+                f"have {JAX_POLICIES}"
+            )
+        dev_pols = policies
+    else:
+        dev_pols = []
+    host_pols = [p for p in policies if p not in dev_pols]
+
+    out: Dict[str, Dict[int, float]] = {p: {} for p in policies}
+    if dev_pols and len(trace):
+        from .jax_policies import simulate_trace_batched
+
+        tr = np.asarray(trace, dtype=np.int64)
+        if block_size > 1:
+            tr = tr // block_size
+        hits = simulate_trace_batched(
+            tr, dev_pols, caps, num_sets=num_sets, use_kernel=use_kernel
+        )
+        counts = np.asarray(hits[0].sum(-1))  # (P, C) exact int hit counts
+        for pi, p in enumerate(dev_pols):
+            for ci, c in enumerate(caps):
+                out[p][c] = int(counts[pi, ci]) / len(tr)
+    elif dev_pols:  # empty trace: mirror SimResult's 0-access convention
+        for p in dev_pols:
+            out[p] = {c: 0.0 for c in caps}
+    for p in host_pols:
+        for c in caps:
             out[p][c] = simulate(
                 p, trace, c, num_sets=num_sets, block_size=block_size
             ).hit_ratio

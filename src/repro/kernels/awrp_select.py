@@ -54,3 +54,48 @@ def awrp_select_kernel(
         out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
         interpret=interpret,
     )(f, r, clock, valid, pinned)
+
+
+def _rows_kernel(f_ref, r_ref, clock_ref, valid_ref, out_ref):
+    f = f_ref[...]  # (B, P) int32
+    r = r_ref[...]
+    clock = clock_ref[...]  # (B,) int32
+    valid = valid_ref[...] != 0
+    B, P = f.shape
+    # paper eq. (1), same float32 ops as the host oracle (bit-exact decisions)
+    dt = jnp.maximum(clock[:, None] - r, 1).astype(jnp.float32)
+    w = f.astype(jnp.float32) / dt
+    # w >= 0 always (F >= 0, dt >= 1), and non-negative IEEE floats order
+    # identically to their int32 bit patterns — so the first-index argmin
+    # runs as two vectorizable integer min-reductions (XLA CPU lowers a
+    # float argmin to a ~30x slower scalar reduce; TPU dislikes 1D iota).
+    bits = jax.lax.bitcast_convert_type(w, jnp.int32)
+    bits = jnp.where(valid, bits, jnp.iinfo(jnp.int32).max)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (B, P), 1)
+    m = jnp.min(bits, axis=-1, keepdims=True)
+    out_ref[...] = jnp.min(jnp.where(bits == m, lane, P), axis=-1).astype(
+        jnp.int32
+    )
+
+
+def awrp_select_rows_kernel(
+    f: jax.Array,  # (B, P) int32, P % 128 == 0
+    r: jax.Array,  # (B, P) int32
+    clock: jax.Array,  # (B,) int32
+    valid: jax.Array,  # (B, P) int32 (0/1)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Rows variant: all B policy instances in ONE grid program.
+
+    Used by the batched sweep engine, which calls this once per trace step
+    with B = the whole (trace, policy, capacity) grid — the metadata for every
+    cache in the sweep sits in VMEM together, so one VPU pass computes every
+    victim.  The per-row-program variant above stays for serving, where B is
+    large and rows are independent."""
+    B, _ = f.shape
+    return pl.pallas_call(
+        _rows_kernel,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(f, r, clock, valid)

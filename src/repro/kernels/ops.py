@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.awrp_select import awrp_select_kernel
+from repro.kernels.awrp_select import awrp_select_kernel, awrp_select_rows_kernel
 from repro.kernels.flash_attn import flash_attention_kernel
 from repro.kernels.paged_attn import paged_attention_kernel
 
@@ -36,6 +36,26 @@ def awrp_select(f, r, clock, valid, pinned, *, interpret: bool | None = None):
         f.astype(jnp.int32), r.astype(jnp.int32), clock.astype(jnp.int32),
         valid.astype(jnp.int32), pinned.astype(jnp.int32),
         interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def awrp_select_rows(f, r, clock, valid, *, interpret: bool | None = None):
+    """(B, P) int32 metadata -> (B,) int32 victims, all rows in one program.
+
+    The batched sweep engine's victim-selection hot path: called once per
+    trace step with B = the flattened (trace, policy, capacity) grid."""
+    if interpret is None:
+        interpret = _default_interpret()
+    P = f.shape[1]
+    pad = (-P) % 128  # lane alignment
+    if pad:
+        f = jnp.pad(f, ((0, 0), (0, pad)))
+        r = jnp.pad(r, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))  # padded slots invalid
+    return awrp_select_rows_kernel(
+        f.astype(jnp.int32), r.astype(jnp.int32), clock.astype(jnp.int32),
+        valid.astype(jnp.int32), interpret=interpret,
     )
 
 

@@ -23,6 +23,11 @@ def ref_awrp_select(f, r, clock, valid, pinned):
     return jnp.argmin(w, axis=-1).astype(jnp.int32)
 
 
+def ref_awrp_select_rows(f, r, clock, valid):
+    """Rows-kernel oracle: (B,P) metadata -> (B,) victims, no pin mask."""
+    return ref_awrp_select(f, r, clock, valid, jnp.zeros_like(valid))
+
+
 def ref_paged_attention(q, k_pages, v_pages, page_start, cur_pos):
     """q (B,KVH,G,hd); pages (B,P,page,KVH,hd) -> (out, page_mass)."""
     B, P, page, KVH, hd = k_pages.shape

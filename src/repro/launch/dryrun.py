@@ -119,7 +119,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
-        ca = compiled.cost_analysis() or {}
+        ca = R.cost_analysis_dict(compiled)
         mem = compiled.memory_analysis()
         hlo = compiled.as_text()
         coll = R.collective_bytes(hlo)

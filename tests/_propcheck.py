@@ -1,0 +1,74 @@
+"""Property-testing shim: real hypothesis when installed, else a minimal
+deterministic fallback.
+
+CI installs hypothesis (see pyproject ``[project.optional-dependencies]``)
+and gets full shrinking + edge-case generation.  Hermetic containers without
+pip access still run every property test through the fallback: a fixed-seed
+random sampler honouring ``max_examples``.  Only the strategy surface this
+suite actually uses is implemented (integers / lists / sampled_from, kwargs
+``@given``, ``@settings(max_examples=..., deadline=...)``).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801 — mimics `hypothesis.strategies` module surface
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples", 20)
+                # deterministic per-test seed (hash() is salted per process)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # NOT functools.wraps: copying __wrapped__ would expose fn's
+            # signature and make pytest treat the drawn params as fixtures
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(runner, attr, getattr(fn, attr))
+            return runner
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

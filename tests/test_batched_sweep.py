@@ -1,0 +1,164 @@
+"""Batched sweep engine: bit-exact parity with per-trace scans and the host
+oracles, across set-associativity, mixed capacities (padded-ways masking),
+Pallas-kernel routing, and the sweep() dispatch layer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _propcheck import given, settings, st  # hypothesis, or fallback shim
+
+from repro.core import make_policy, sweep
+from repro.core.jax_policies import (
+    JAX_POLICIES,
+    access_sets,
+    init_set_state,
+    simulate_trace,
+    simulate_trace_batched,
+    simulate_trace_sets,
+)
+from repro.core.traces import paper_trace, trace_zipf
+
+
+def host_hits_sets(policy, trace, capacity, num_sets):
+    """Host-oracle per-access hit bits under the simulator's set mapping."""
+    per = capacity // num_sets
+    insts = {s: make_policy(policy, per) for s in range(num_sets)}
+    return np.array(
+        [insts[int(b) % num_sets].access(int(b)) for b in trace], dtype=bool
+    )
+
+
+# ---------------------------------------------------------------------------
+# parity with the host oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_sets", [1, 4, 8])
+def test_batched_matches_host_oracles(num_sets):
+    """Every device policy x mixed capacities x 2 traces, one batch, vs the
+    host oracles — including the padded-ways masking for smaller caps."""
+    rng = np.random.RandomState(3)
+    traces = rng.randint(0, 80, size=(2, 400))
+    caps = [8, 16, 32]  # mixed sizes in ONE batch (W padded to 32//num_sets)
+    hits = np.asarray(
+        simulate_trace_batched(traces, JAX_POLICIES, caps, num_sets=num_sets)
+    )
+    assert hits.shape == (2, len(JAX_POLICIES), len(caps), 400)
+    for n in range(2):
+        for pi, pol in enumerate(JAX_POLICIES):
+            for ci, cap in enumerate(caps):
+                ref = host_hits_sets(pol, traces[n], cap, num_sets)
+                divergence = np.flatnonzero(hits[n, pi, ci] != ref)
+                assert divergence.size == 0, (
+                    f"{pol} cap={cap} sets={num_sets} trace={n}: "
+                    f"first divergence at access {divergence[0]}"
+                )
+
+
+@pytest.mark.parametrize("policy", JAX_POLICIES)
+def test_batched_matches_per_trace_scan(policy):
+    """num_sets=1 engine row == the original simulate_trace lax.scan."""
+    tr = paper_trace()[:500]
+    scan = np.asarray(simulate_trace(jnp.asarray(tr), 48, policy=policy))
+    batched = np.asarray(simulate_trace_batched(tr, [policy], [48]))[0, 0, 0]
+    assert (scan == batched).all()
+
+
+def test_padded_ways_masking_edge():
+    """A 4-way cache padded into a 32-wide batch behaves exactly like a
+    4-way cache run alone (dead lanes never filled, never evicted from)."""
+    tr = trace_zipf(500, 60, 0.9, seed=7)
+    mixed = np.asarray(simulate_trace_batched(tr, JAX_POLICIES, [4, 32]))
+    for ci, cap in enumerate([4, 32]):
+        solo = np.asarray(simulate_trace_batched(tr, JAX_POLICIES, [cap]))
+        assert (mixed[:, :, ci] == solo[:, :, 0]).all(), f"cap={cap}"
+
+
+def test_kernel_routing_parity():
+    """Pallas rows-kernel victim selection == inline min-reduction."""
+    tr = trace_zipf(400, 50, 0.8, seed=1)
+    on = np.asarray(
+        simulate_trace_batched(tr, JAX_POLICIES, [6, 24], use_kernel=True)
+    )
+    off = np.asarray(
+        simulate_trace_batched(tr, JAX_POLICIES, [6, 24], use_kernel=False)
+    )
+    assert (on == off).all()
+
+
+# ---------------------------------------------------------------------------
+# wrappers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", JAX_POLICIES)
+def test_simulate_trace_sets_and_access_sets(policy):
+    tr = trace_zipf(250, 40, 0.9, seed=13)
+    ref = host_hits_sets(policy, tr, 16, 4)
+    hits = np.asarray(simulate_trace_sets(tr, 16, policy=policy, num_sets=4))
+    assert (hits == ref).all()
+    state = init_set_state(16, 4)
+    inc = []
+    for b in tr[:120]:
+        state, h = access_sets(state, b, policy=policy)
+        inc.append(bool(h))
+    assert (np.asarray(inc) == ref[:120]).all()
+
+
+def test_input_validation():
+    tr = np.arange(10)
+    with pytest.raises(ValueError, match="not divisible"):
+        simulate_trace_batched(tr, ["awrp"], [9], num_sets=4)
+    with pytest.raises(ValueError, match="not device policies"):
+        simulate_trace_batched(tr, ["car"], [8])
+    with pytest.raises(ValueError, match="fit int32"):
+        simulate_trace_batched(np.array([1, -2]), ["awrp"], [8])
+    with pytest.raises(ValueError, match="fit int32"):
+        simulate_trace_batched(np.array([1, 2**32 - 1]), ["awrp"], [8])
+
+
+# ---------------------------------------------------------------------------
+# sweep() dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_device_dispatch_bitexact():
+    """auto dispatch (device engine + host partition) == all-host sweep,
+    exactly — the Table-1 acceptance property."""
+    tr = paper_trace()
+    caps = [30, 60, 90, 120]
+    pols = ["lru", "fifo", "car", "awrp"]  # car forces a host partition
+    auto = sweep(pols, tr, caps)
+    host = sweep(pols, tr, caps, device=False)
+    assert auto == host
+    assert list(auto) == pols  # requested policy order preserved
+
+
+def test_sweep_device_true_rejects_host_only_policies():
+    with pytest.raises(ValueError, match="no device implementation"):
+        sweep(["awrp", "arc"], [1, 2, 3], [4], device=True)
+
+
+# ---------------------------------------------------------------------------
+# property test (hypothesis in CI, deterministic fallback sampler otherwise)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    trace=st.lists(
+        st.integers(min_value=0, max_value=30), min_size=96, max_size=96
+    ),
+    num_sets=st.sampled_from([1, 2, 4]),
+)
+def test_property_batched_host_parity(trace, num_sets):
+    """Fixed shapes (96 accesses, caps {8, 12}) so jit caches across
+    examples; content, set count and the full policy axis vary."""
+    tr = np.asarray(trace, dtype=np.int64)
+    hits = np.asarray(
+        simulate_trace_batched(tr, JAX_POLICIES, [8, 12], num_sets=num_sets)
+    )
+    for pi, pol in enumerate(JAX_POLICIES):
+        for ci, cap in enumerate([8, 12]):
+            ref = host_hits_sets(pol, tr, cap, num_sets)
+            assert (hits[0, pi, ci] == ref).all(), (pol, cap, num_sets)

@@ -27,8 +27,9 @@ from repro.sharding.specs import activate, make_rules
 from repro.optim import optimizer as O
 from repro.train.train_step import make_train_step
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+# no axis_types kwarg: jax.sharding.AxisType only exists on newer jax, and
+# Auto is the default mesh axis semantics anyway
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 results = {}
 for arch in ("qwen25_14b", "zamba2_7b", "phi35_moe"):
     cfg = load_smoke_config(arch)
@@ -49,7 +50,8 @@ for arch in ("qwen25_14b", "zamba2_7b", "phi35_moe"):
             batch["patches"] = jax.ShapeDtypeStruct(
                 (8, cfg.n_patch_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
         compiled = jax.jit(step).lower(params, opt, batch).compile()
-        ca = compiled.cost_analysis()
+        from repro.roofline.analysis import cost_analysis_dict
+        ca = cost_analysis_dict(compiled)
         results[arch] = {"flops": float(ca.get("flops", 0.0)),
                          "ok": True}
 print(json.dumps(results))

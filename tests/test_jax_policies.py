@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st  # hypothesis, or fallback shim
 
 from repro.core import make_policy
 from repro.core.jax_policies import (

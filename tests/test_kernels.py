@@ -54,6 +54,22 @@ def test_awrp_select_matches_host_policy():
         assert int(got[0]) == host.victim_slot()
 
 
+@pytest.mark.parametrize("B,P", [(1, 8), (4, 64), (3, 130), (32, 256)])
+def test_awrp_select_rows_matches_ref(B, P):
+    """Rows variant (one grid program, bit-pattern min-reduction) == the
+    float-argmin oracle."""
+    rng = np.random.RandomState(B * 77 + P)
+    f = rng.randint(1, 50, size=(B, P)).astype(np.int32)
+    r = rng.randint(0, 100, size=(B, P)).astype(np.int32)
+    clock = rng.randint(101, 200, size=(B,)).astype(np.int32)
+    valid = (rng.rand(B, P) < 0.9).astype(np.int32)
+    valid[:, 0] = 1
+    got = ops.awrp_select_rows(*map(jnp.asarray, (f, r, clock, valid)),
+                               interpret=True)
+    want = ref.ref_awrp_select_rows(*map(jnp.asarray, (f, r, clock, valid)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 # ---------------------------------------------------------------------------
 # paged_attention
 # ---------------------------------------------------------------------------

@@ -4,8 +4,7 @@ to serving) — invariants under arbitrary decode streams."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st  # hypothesis, or fallback shim
 
 from repro.cache import paged_kv
 from repro.core.kv_policy import PAGE_POLICIES, page_victim

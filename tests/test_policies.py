@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _propcheck import given, settings, st  # hypothesis, or fallback shim
 
 from repro.core import (
     AWRP,

@@ -17,7 +17,7 @@ import pytest
 
 from repro.configs.base import ShapeSpec, load_smoke_config
 from repro.models import model as M
-from repro.roofline.analysis import collective_bytes
+from repro.roofline.analysis import collective_bytes, cost_analysis_dict
 from repro.roofline.analytic import MeshInfo, cell_costs
 
 
@@ -34,8 +34,9 @@ def test_cost_analysis_counts_scan_once():
 
     x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    f_scan = jax.jit(scanned).lower(x, w).compile().cost_analysis()["flops"]
-    f_unroll = jax.jit(unrolled).lower(x, w).compile().cost_analysis()["flops"]
+    f_scan = cost_analysis_dict(jax.jit(scanned).lower(x, w).compile())["flops"]
+    f_unroll = cost_analysis_dict(
+        jax.jit(unrolled).lower(x, w).compile())["flops"]
     assert f_unroll == pytest.approx(8 * f_scan, rel=0.01)
 
 
@@ -59,7 +60,7 @@ def test_analytic_flops_matches_xla_on_scanfree_config(arch):
     def fwd(p, b):
         return M.forward(p, cfg, b)
 
-    ca = jax.jit(fwd).lower(params, batch).compile().cost_analysis()
+    ca = cost_analysis_dict(jax.jit(fwd).lower(params, batch).compile())
     xla_flops = float(ca["flops"])
     a = cell_costs(cfg, shape, mesh=MeshInfo(batch_shards=1, model_shards=1),
                    schedule_factor=2.0)  # rectangular flash == what we lower
