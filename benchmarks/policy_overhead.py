@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core import make_policy
 from repro.core.jax_policies import (
-    JAX_POLICIES,
+    DEVICE_POLICIES,
     simulate_trace,
     simulate_trace_batched,
 )
@@ -50,17 +50,18 @@ def device_us_per_access(policy: str, trace, cap) -> float:
 
 
 def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000):
-    """Whole Table-1 grid (all device policies x all frame sizes) as ONE
-    jitted program vs the host oracle loop, plus a kernel-routed run — the
-    Pallas awrp_select_rows path the sweep exercises on TPU."""
+    """The COMPLETE six-policy Table-1 grid (awrp/lru/fifo/lfu + the
+    array-encoded arc/car x all frame sizes) as ONE jitted program vs the
+    host oracle loop, plus a kernel-routed run — the Pallas
+    awrp_select_rows path the sweep exercises on TPU."""
     tr = trace_zipf(n_accesses, 2_000, 0.9, seed=5)
-    grid = len(JAX_POLICIES) * len(SWEEP_CAPS)
+    grid = len(DEVICE_POLICIES) * len(SWEEP_CAPS)
 
     def timed(**kw):
-        h = simulate_trace_batched(tr, JAX_POLICIES, SWEEP_CAPS, **kw)
+        h = simulate_trace_batched(tr, DEVICE_POLICIES, SWEEP_CAPS, **kw)
         h.block_until_ready()  # compile
         t0 = time.perf_counter()
-        h = simulate_trace_batched(tr, JAX_POLICIES, SWEEP_CAPS, **kw)
+        h = simulate_trace_batched(tr, DEVICE_POLICIES, SWEEP_CAPS, **kw)
         h.block_until_ready()
         return time.perf_counter() - t0, np.asarray(h[0].sum(-1))
 
@@ -68,8 +69,8 @@ def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000):
     ker_s, ker_counts = timed(use_kernel=True)
 
     t0 = time.perf_counter()
-    host_counts = np.zeros((len(JAX_POLICIES), len(SWEEP_CAPS)), dtype=np.int64)
-    for pi, pol in enumerate(JAX_POLICIES):
+    host_counts = np.zeros((len(DEVICE_POLICIES), len(SWEEP_CAPS)), dtype=np.int64)
+    for pi, pol in enumerate(DEVICE_POLICIES):
         for ci, cap in enumerate(SWEEP_CAPS):
             p = make_policy(pol, cap)
             for b in tr:
@@ -78,7 +79,7 @@ def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000):
     host_s = time.perf_counter() - t0
 
     parity = (counts == host_counts).all() and (ker_counts == host_counts).all()
-    print(f"== batched sweep engine: {grid}-config Table-1 grid, "
+    print(f"== batched sweep engine: {grid}-config six-policy Table-1 grid, "
           f"{n_accesses} accesses ==")
     print(f"host oracle loop : {host_s:8.3f}s")
     print(f"one-jit grid     : {dev_s:8.3f}s  ({host_s / dev_s:5.1f}x)")
@@ -103,11 +104,11 @@ def run(out_lines=None, smoke: bool = False):
     for pol in ("awrp", "wrp", "lru", "fifo", "lfu", "arc", "car", "2q"):
         host = host_us_per_access(pol, trace, CAP)
         dev = (device_us_per_access(pol, trace, CAP)
-               if pol in JAX_POLICIES else float("nan"))
+               if pol in DEVICE_POLICIES else float("nan"))
         print(f"{pol:>8} | {host:14.2f} | {dev:14.2f}")
         if out_lines is not None:
             out_lines.append(f"policy_host_{pol},{host:.2f},us_per_access")
-            if pol in JAX_POLICIES:
+            if pol in DEVICE_POLICIES:
                 out_lines.append(f"policy_device_{pol},{dev:.2f},us_per_access")
     # the paper's overhead claim: AWRP (lazy) cheaper than WRP (eager)
     a = host_us_per_access("awrp", trace, CAP)

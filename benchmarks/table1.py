@@ -2,9 +2,9 @@
 paper's frame sizes, on the calibrated stand-in trace (+ the paper's own
 digits for side-by-side comparison).
 
-The LRU/FIFO/AWRP rows run through the batched device engine (one jitted
-program for the whole policy x frame-size grid); CAR is pointer-based and
-stays on the host oracle path.  ``sweep()`` partitions automatically."""
+Every row — including the adaptive CAR, array-encoded per DESIGN.md §2 —
+runs through the batched device engine as one jitted program for the whole
+policy x frame-size grid, bit-identical to the host oracles."""
 
 from __future__ import annotations
 

@@ -1,8 +1,8 @@
 """Multi-trace policy evaluation (the honest generalization check behind the
 single calibrated trace): real-program traces + locality models, AWRP vs
 every implemented policy.  ``sweep()`` runs the device-capable policies
-(lru/fifo/lfu/awrp) through the batched engine per trace; arc/car/2q/opt
-stay on the host oracle path."""
+(lru/fifo/lfu/awrp plus the array-encoded arc/car) through the batched
+engine per trace; 2q/opt stay on the host oracle path."""
 
 from __future__ import annotations
 

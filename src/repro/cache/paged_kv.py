@@ -70,10 +70,14 @@ def awrp_victim(
     pinned: jax.Array,  # (B, P) bool — excluded (the open page)
 ) -> jax.Array:
     """Vectorized eq. (1) victim select; same float32 ops / first-index
-    tie-break as the host oracle (bit-exact, property-tested)."""
+    tie-break as the host oracle (bit-exact, property-tested).  Selection is
+    the bit-pattern min-reduction (w >= 0, so IEEE order == int32 bit
+    order), not argmin — see repro.core.kv_policy."""
+    from repro.core.kv_policy import first_min
+
     w = awrp_weights(f, r, clock[:, None])
-    w = jnp.where(valid & ~pinned, w, jnp.inf)
-    return jnp.argmin(w, axis=-1).astype(jnp.int32)  # (B,)
+    bits = jax.lax.bitcast_convert_type(w, jnp.int32)
+    return first_min(jnp.where(valid & ~pinned, bits, INT_MAX))  # (B,)
 
 
 def insert_token(

@@ -24,13 +24,17 @@ from .traces import TRACES  # noqa: F401
 #: the numpy oracles never pay the jax import
 _DEVICE_EXPORTS = (
     "JAX_POLICIES",
+    "ADAPTIVE_POLICIES",
+    "DEVICE_POLICIES",
     "POLICY_IDS",
     "CacheState",
     "SetCacheState",
+    "AdaptiveState",
     "access",
     "access_sets",
     "init_state",
     "init_set_state",
+    "init_adaptive_state",
     "simulate_trace",
     "simulate_trace_sets",
     "simulate_trace_batched",

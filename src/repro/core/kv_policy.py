@@ -4,10 +4,19 @@ its baselines, applied to the serving cache).
 ``page_victim`` is the single decision point used by the paged pool: AWRP is
 the paper's eq. (1); LRU/FIFO/LFU are the baselines the paper compares
 against, re-expressed on page metadata so the serving ablation
-(benchmarks/serve_policy_bench.py) is apples-to-apples.  All are pure
-vectorized ops — see DESIGN.md §2 for why ARC/CAR stay host-side.
+(benchmarks/serve_policy_bench.py) is apples-to-apples.  ``arc`` and ``car``
+are stateless two-segment approximations of the adaptive policies on the
+same metadata (DESIGN.md §2): pages referenced at most once since insertion
+form the T1-analog (evicted first), multiply-referenced pages the T2-analog;
+``arc`` orders within a segment by recency, ``car`` by insertion (clock)
+order.  The full adaptive ARC/CAR — ghost lists and the self-tuning ``p`` —
+need directory state the pool doesn't carry and run in the batched sweep
+engine (``repro.core.jax_policies``).
 
-On TPU the AWRP path can route through the fused Pallas kernel
+Every branch is a chain of vectorizable min-reductions — no ``argmin``,
+which XLA CPU lowers to a ~30x slower scalar reduce (decision-identical to
+the argmin formulation; parity-tested in tests/test_paged_pool.py).  On TPU
+the AWRP path can also route through the fused Pallas kernel
 (``repro.kernels.ops.awrp_select``); the jnp fallback used inside the
 GSPMD-partitioned decode step is decision-identical (property-tested).
 """
@@ -21,7 +30,22 @@ from repro.core.jax_policies import awrp_weights
 
 INT_MAX = 2**31 - 1
 
-PAGE_POLICIES = ("awrp", "lru", "fifo", "lfu")
+PAGE_POLICIES = ("awrp", "lru", "fifo", "lfu", "arc", "car")
+
+
+def first_min(key: jax.Array) -> jax.Array:
+    """First index achieving the row minimum of ``key`` (..., P) int32 —
+    ``argmin`` semantics as two vectorizable min-reductions."""
+    P = key.shape[-1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, key.shape, key.ndim - 1)
+    m = jnp.min(key, axis=-1, keepdims=True)
+    return jnp.min(jnp.where(key == m, lane, P), axis=-1).astype(jnp.int32)
+
+
+def _masked_tiebreak(primary: jax.Array, secondary: jax.Array) -> jax.Array:
+    """First index minimizing (primary, secondary) lexicographically."""
+    m = jnp.min(primary, axis=-1, keepdims=True)
+    return first_min(jnp.where(primary == m, secondary, INT_MAX))
 
 
 def page_victim(
@@ -35,16 +59,21 @@ def page_victim(
     valid = (page_start >= 0) & ~pinned
     if policy == "awrp":
         w = awrp_weights(f, r, clock[:, None])
-        return jnp.argmin(jnp.where(valid, w, jnp.inf), axis=-1).astype(jnp.int32)
+        # w >= 0 and finite, so its int32 bit pattern orders identically
+        bits = jax.lax.bitcast_convert_type(w, jnp.int32)
+        return first_min(jnp.where(valid, bits, INT_MAX))
     if policy == "lru":
-        return jnp.argmin(jnp.where(valid, r, INT_MAX), axis=-1).astype(jnp.int32)
+        return first_min(jnp.where(valid, r, INT_MAX))
     if policy == "fifo":
-        return jnp.argmin(
-            jnp.where(valid, page_start, INT_MAX), axis=-1
-        ).astype(jnp.int32)
+        return first_min(jnp.where(valid, page_start, INT_MAX))
     if policy == "lfu":
-        fm = jnp.where(valid, f, INT_MAX)
-        minf = jnp.min(fm, axis=-1, keepdims=True)
-        cand = fm == minf
-        return jnp.argmin(jnp.where(cand, r, INT_MAX), axis=-1).astype(jnp.int32)
+        return _masked_tiebreak(jnp.where(valid, f, INT_MAX), r)
+    if policy == "arc":
+        # T1-analog (f <= 1, seen once) evicts before T2-analog; LRU within
+        cold = jnp.where(valid, (f > 1).astype(jnp.int32), INT_MAX)
+        return _masked_tiebreak(cold, r)
+    if policy == "car":
+        # same segmentation, clock-hand (insertion) order within a segment
+        cold = jnp.where(valid, (f > 1).astype(jnp.int32), INT_MAX)
+        return _masked_tiebreak(cold, page_start)
     raise ValueError(f"unknown page policy {policy!r}; have {PAGE_POLICIES}")

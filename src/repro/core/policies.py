@@ -286,11 +286,16 @@ class RANDOM(ReplacementPolicy):
 
 
 class ARC(ReplacementPolicy):
+    """Adaptation parameter ``p`` is maintained in float32 with the exact op
+    order of the device engine (``jax_policies._arc_step``) so the
+    ``int(p)`` comparisons — and therefore every decision — match the
+    batched device implementation bit-for-bit (property-tested)."""
+
     name = "arc"
 
     def __init__(self, capacity: int):
         super().__init__(capacity)
-        self.p = 0.0
+        self.p = np.float32(0.0)
         # MRU at the right end of each OrderedDict
         self.T1: "OrderedDict[int, None]" = OrderedDict()
         self.T2: "OrderedDict[int, None]" = OrderedDict()
@@ -317,14 +322,17 @@ class ARC(ReplacementPolicy):
         if block in self.T2:
             self.T2.move_to_end(block)
             return self._count(True)
+        f32 = np.float32
         if block in self.B1:
-            self.p = min(c, self.p + max(len(self.B2) / max(len(self.B1), 1), 1))
+            delta = max(f32(len(self.B2)) / f32(max(len(self.B1), 1)), f32(1.0))
+            self.p = min(f32(c), f32(self.p + delta))
             self._replace(block)
             del self.B1[block]
             self.T2[block] = None
             return self._count(False)
         if block in self.B2:
-            self.p = max(0, self.p - max(len(self.B1) / max(len(self.B2), 1), 1))
+            delta = max(f32(len(self.B1)) / f32(max(len(self.B2), 1)), f32(1.0))
+            self.p = max(f32(0.0), f32(self.p - delta))
             self._replace(block)
             del self.B2[block]
             self.T2[block] = None
@@ -385,11 +393,14 @@ class _Clock:
 
 
 class CAR(ReplacementPolicy):
+    """``p`` kept in float32 with the device engine's exact op order
+    (``jax_policies._car_step``) — see the ARC docstring."""
+
     name = "car"
 
     def __init__(self, capacity: int):
         super().__init__(capacity)
-        self.p = 0.0
+        self.p = np.float32(0.0)
         self.T1 = _Clock()
         self.T2 = _Clock()
         self.B1: "OrderedDict[int, None]" = OrderedDict()
@@ -436,18 +447,17 @@ class CAR(ReplacementPolicy):
                     >= 2 * c
                 ):
                     self.B2.popitem(last=False)
+        f32 = np.float32
         if not in_b1 and not in_b2:
             self.T1.insert_tail(block)
         elif in_b1:
-            self.p = min(
-                float(c), self.p + max(1.0, len(self.B2) / max(len(self.B1), 1))
-            )
+            delta = max(f32(1.0), f32(len(self.B2)) / f32(max(len(self.B1), 1)))
+            self.p = min(f32(c), f32(self.p + delta))
             del self.B1[block]
             self.T2.insert_tail(block)
         else:
-            self.p = max(
-                0.0, self.p - max(1.0, len(self.B1) / max(len(self.B2), 1))
-            )
+            delta = max(f32(1.0), f32(len(self.B1)) / f32(max(len(self.B2), 1)))
+            self.p = max(f32(0.0), f32(self.p - delta))
             del self.B2[block]
             self.T2.insert_tail(block)
         return self._count(False)

@@ -14,10 +14,11 @@ Two execution paths:
     jitted ``lax.scan`` program, bit-identical to the oracle decisions.
 
 ``sweep(device="auto")`` (the default) partitions the requested policies:
-every device-capable policy (``JAX_POLICIES``) goes through the batched
-engine in a single program, the pointer-based rest (ARC/CAR/2Q/OPT/...) run
-on the host loop.  ``device=False`` forces the host path for everything;
-``device=True`` requires every policy to be device-capable.
+every device-capable policy (``DEVICE_POLICIES`` — awrp/lru/fifo/lfu plus
+the array-encoded arc/car) goes through the batched engine in a single
+program; the rest (2Q/OPT/RANDOM/...) run on the host loop.
+``device=False`` forces the host path for everything; ``device=True``
+requires every policy to be device-capable.
 """
 
 from __future__ import annotations
@@ -103,17 +104,17 @@ def sweep(
     policies = list(policies)
     caps = [int(c) for c in capacities]
     if device == "auto":
-        from .jax_policies import JAX_POLICIES
+        from .jax_policies import DEVICE_POLICIES
 
-        dev_pols = [p for p in policies if p in JAX_POLICIES]
+        dev_pols = [p for p in policies if p in DEVICE_POLICIES]
     elif device:
-        from .jax_policies import JAX_POLICIES
+        from .jax_policies import DEVICE_POLICIES
 
-        bad = [p for p in policies if p not in JAX_POLICIES]
+        bad = [p for p in policies if p not in DEVICE_POLICIES]
         if bad:
             raise ValueError(
                 f"device=True but {bad} have no device implementation; "
-                f"have {JAX_POLICIES}"
+                f"have {DEVICE_POLICIES}"
             )
         dev_pols = policies
     else:

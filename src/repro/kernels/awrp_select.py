@@ -2,8 +2,11 @@
 
 The eviction decision is the paper's hot loop: every pool-full page
 allocation scans all P pages' metadata, computes W = F/(N-R) (eq. 1) and
-takes the argmin.  Fused in one VPU pass over VMEM-resident metadata —
-no HBM round-trip for the weight vector, no separate mask/argmin kernels.
+takes the first-index minimum.  Fused in one VPU pass over VMEM-resident
+metadata — no HBM round-trip for the weight vector, no separate
+mask/argmin kernels, and no argmin at all: both variants select victims
+with the bit-pattern min-reduction (argmin lowers to a ~30x slower scalar
+reduce on XLA CPU).
 
 Layout: metadata vectors are (B, P) int32 with P padded to the 128-lane
 boundary by the ops.py wrapper; grid is (B,) — one program per sequence
@@ -17,17 +20,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _masked_weight_first_min(f, r, clock_col, mask):
+    """Shared victim-select body for both kernel variants: paper eq. (1) in
+    the host oracle's exact float32 ops (bit-exact decisions), then the
+    first-index minimum over masked lanes as two vectorizable integer
+    min-reductions.  w >= 0 always (F >= 0, dt >= 1), and non-negative IEEE
+    floats order identically to their int32 bit patterns — so no argmin
+    (XLA CPU lowers a float argmin to a ~30x slower scalar reduce; TPU
+    dislikes 1D iota)."""
+    P = f.shape[-1]
+    dt = jnp.maximum(clock_col - r, 1).astype(jnp.float32)
+    w = f.astype(jnp.float32) / dt
+    bits = jax.lax.bitcast_convert_type(w, jnp.int32)
+    bits = jnp.where(mask, bits, jnp.iinfo(jnp.int32).max)
+    lane = jax.lax.broadcasted_iota(jnp.int32, bits.shape, 1)
+    m = jnp.min(bits, axis=-1, keepdims=True)
+    return jnp.min(jnp.where(bits == m, lane, P), axis=-1).astype(jnp.int32)
+
+
 def _kernel(f_ref, r_ref, clock_ref, valid_ref, pinned_ref, out_ref):
     f = f_ref[...]  # (1, P) int32
     r = r_ref[...]
     clock = clock_ref[0]
     valid = valid_ref[...] != 0
     pinned = pinned_ref[...] != 0
-    # paper eq. (1), same float32 ops as the host oracle (bit-exact decisions)
-    dt = jnp.maximum(clock - r, 1).astype(jnp.float32)
-    w = f.astype(jnp.float32) / dt
-    w = jnp.where(valid & ~pinned, w, jnp.inf)
-    out_ref[0] = jnp.argmin(w[0]).astype(jnp.int32)
+    out_ref[0] = _masked_weight_first_min(f, r, clock, valid & ~pinned)[0]
 
 
 def awrp_select_kernel(
@@ -61,21 +78,7 @@ def _rows_kernel(f_ref, r_ref, clock_ref, valid_ref, out_ref):
     r = r_ref[...]
     clock = clock_ref[...]  # (B,) int32
     valid = valid_ref[...] != 0
-    B, P = f.shape
-    # paper eq. (1), same float32 ops as the host oracle (bit-exact decisions)
-    dt = jnp.maximum(clock[:, None] - r, 1).astype(jnp.float32)
-    w = f.astype(jnp.float32) / dt
-    # w >= 0 always (F >= 0, dt >= 1), and non-negative IEEE floats order
-    # identically to their int32 bit patterns — so the first-index argmin
-    # runs as two vectorizable integer min-reductions (XLA CPU lowers a
-    # float argmin to a ~30x slower scalar reduce; TPU dislikes 1D iota).
-    bits = jax.lax.bitcast_convert_type(w, jnp.int32)
-    bits = jnp.where(valid, bits, jnp.iinfo(jnp.int32).max)
-    lane = jax.lax.broadcasted_iota(jnp.int32, (B, P), 1)
-    m = jnp.min(bits, axis=-1, keepdims=True)
-    out_ref[...] = jnp.min(jnp.where(bits == m, lane, P), axis=-1).astype(
-        jnp.int32
-    )
+    out_ref[...] = _masked_weight_first_min(f, r, clock[:, None], valid)
 
 
 def awrp_select_rows_kernel(

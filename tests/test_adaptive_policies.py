@@ -1,0 +1,167 @@
+"""Host-oracle ARC/CAR adaptation behaviour, pinned by hand-traced
+scenarios: ghost-hit ``p`` updates, CAR's reference-bit promotion, ghost-list
+order, and directory bounds.  These assertions are the SPEC the device port
+in ``repro.core.jax_policies`` (AdaptiveState planes) is validated against —
+the device parity suite in tests/test_batched_sweep.py checks decisions
+only; this file checks the internal adaptation mechanics that produce them.
+"""
+
+import numpy as np
+
+from repro.core.policies import ARC, CAR
+
+
+# ---------------------------------------------------------------------------
+# ARC — Megiddo & Modha: ghost hits steer p, _replace obeys it
+# ---------------------------------------------------------------------------
+
+
+def test_arc_ghost_hit_p_updates_and_list_moves():
+    """Hand-traced c=2 scenario exercising both ghost lists.
+
+    1,2     -> T1=[1,2]
+    1 (hit) -> 1 promotes to T2: T1=[2], T2=[1]
+    3 (miss, total=2>=c) -> _replace demotes T1's LRU 2 -> B1 (p=0 => prefer
+                            T1 eviction); 3 enters T1
+    2 (B1 ghost hit)     -> p rises to 1 (delta = max(|B2|/|B1|, 1) = 1);
+                            _replace now spares T1 (|T1|=1 == int(p)) and
+                            demotes T2's LRU 1 -> B2; 2 re-enters at T2
+    1 (B2 ghost hit)     -> p falls back to 0; 1 re-enters at T2's MRU
+    """
+    a = ARC(2)
+    a.access(1)
+    a.access(2)
+    assert list(a.T1) == [1, 2] and not a.T2
+    assert a.access(1) is True  # T1 hit promotes to T2
+    assert list(a.T1) == [2] and list(a.T2) == [1]
+
+    assert a.access(3) is False
+    assert list(a.T1) == [3] and list(a.T2) == [1]
+    assert list(a.B1) == [2] and a.p == 0.0
+
+    assert a.access(2) is False  # B1 ghost hit — a miss, but it tunes p
+    assert a.p == 1.0
+    assert list(a.T1) == [3] and list(a.T2) == [2]
+    assert list(a.B1) == [] and list(a.B2) == [1]
+
+    assert a.access(1) is False  # B2 ghost hit pulls p back down
+    assert a.p == 0.0
+    assert list(a.T2) == [2, 1] and list(a.B2) == []
+
+
+def test_arc_p_saturates_at_capacity_and_zero():
+    """p is clamped to [0, c] no matter how lopsided the ghost traffic."""
+    c = 4
+    a = ARC(c)
+    rng = np.random.RandomState(0)
+    for b in rng.randint(0, 20, size=600):
+        a.access(int(b))
+        assert 0.0 <= a.p <= c
+    # directory bound: |T1|+|T2| <= c, whole directory <= 2c
+    assert len(a.T1) + len(a.T2) <= c
+    assert len(a.T1) + len(a.T2) + len(a.B1) + len(a.B2) <= 2 * c
+
+
+def test_arc_ghost_delta_is_ratio_of_ghost_sizes():
+    """The ghost-hit deltas are max(|B2|/|B1|, 1) up and max(|B1|/|B2|, 1)
+    down — the 'learning rate' scales with how unbalanced the evidence is.
+    Deterministic c=3 scenario where the ratio exceeds 1 both ways."""
+    a = ARC(3)
+    for b in (1, 2, 3):
+        a.access(b)
+        a.access(b)  # re-reference: all three pages settle in T2
+    for b in (4, 5, 6, 7, 8):
+        a.access(b)  # one-shot pages churn through T1 into B1
+    assert list(a.T1) == [8] and list(a.T2) == [2, 3]
+    assert list(a.B1) == [6, 7] and list(a.B2) == [1]
+
+    a.access(6)  # B1 ghost hit: |B2|/|B1| = 1/2 < 1 -> minimum delta 1
+    assert a.p == 1.0
+    assert list(a.B1) == [7] and list(a.B2) == [1, 2]  # T2 LRU demoted
+
+    a.access(7)  # B1 ghost hit: delta = |B2|/|B1| = 2/1 = 2 -> p jumps to 3
+    assert a.p == 3.0
+    assert list(a.B1) == [] and list(a.B2) == [1, 2, 3]
+
+    a.access(1)  # B2 ghost hit: delta = max(|B1|/|B2|, 1) = max(0/3, 1) = 1
+    assert a.p == 2.0
+
+
+# ---------------------------------------------------------------------------
+# CAR — Bansal & Modha: reference bits buy a second chance via promotion
+# ---------------------------------------------------------------------------
+
+
+def test_car_ref_bit_promotion_and_eviction_order():
+    """Hand-traced c=2 scenario.
+
+    1,2     -> T1 clock [1, 2], both ref bits 0
+    1 (hit) -> ONLY sets ref(1); nothing moves (CAR hits are O(1))
+    3 (miss, full) -> clock sweep: head 1 has ref=1 -> promoted to T2 with
+                      the bit cleared (second chance); head 2 has ref=0 ->
+                      evicted to B1; 3 enters T1
+    """
+    c = CAR(2)
+    c.access(1)
+    c.access(2)
+    assert list(c.T1.q) == [1, 2]
+    assert c.T1.ref == {1: False, 2: False}
+
+    assert c.access(1) is True
+    assert c.T1.ref == {1: True, 2: False}  # ref bit set, no list motion
+    assert list(c.T1.q) == [1, 2]
+
+    assert c.access(3) is False
+    assert list(c.T1.q) == [3]
+    assert list(c.T2.q) == [1] and c.T2.ref == {1: False}  # promoted, bit cleared
+    assert list(c.B1) == [2]  # the unreferenced page paid for the miss
+
+
+def test_car_ghost_hit_p_update_uses_post_sweep_lengths():
+    """Continue the scenario: a B1 ghost hit runs the sweep FIRST (evicting
+    ref-0 page 3 to B1), then bumps p by max(1, |B2|/|B1|) computed from the
+    post-sweep ghost sizes, and re-enters the page at T2's tail."""
+    c = CAR(2)
+    for b in (1, 2):
+        c.access(b)
+    c.access(1)
+    c.access(3)  # as in the previous test: T1=[3], T2=[1], B1=[2]
+    assert c.access(2) is False  # B1 ghost hit
+    assert c.p == 1.0  # max(1, |B2|=0 / |B1|=2) = 1
+    assert list(c.T2.q) == [1, 2]  # re-entered at T2 tail
+    assert list(c.B1) == [3]  # sweep evicted the unreferenced T1 page
+    assert c.T2.ref == {1: False, 2: False}
+
+
+def test_car_rotation_clears_ref_bits_without_evicting():
+    """All-referenced T2: the hand must rotate (clearing bits one by one)
+    before it can evict — pages with the bit set survive the first pass."""
+    c = CAR(3)
+    for b in (1, 2, 3):
+        c.access(b)
+        c.access(b)  # second access sets every ref bit in T1
+    # all pages referenced; a miss must still evict exactly one page, and
+    # every survivor keeps residency with its bit cleared
+    resident_before = c.resident_set()
+    c.access(9)
+    assert c.accesses == 7 and c.hits == 3
+    evicted = resident_before - c.resident_set()
+    assert len(evicted) == 1
+    survivors = resident_before - evicted
+    for page in survivors:
+        assert (page in c.T1 and not c.T1.ref[page]) or (
+            page in c.T2 and not c.T2.ref[page]
+        )
+
+
+def test_car_p_bounds_and_directory_invariants():
+    c = CAR(4)
+    rng = np.random.RandomState(1)
+    for b in rng.randint(0, 16, size=800):
+        c.access(int(b))
+        assert 0.0 <= c.p <= 4
+        assert len(c.T1) + len(c.T2) <= 4
+        assert len(c.T1) + len(c.B1) <= 5  # c + 1, transiently pre-discard
+        assert (
+            len(c.T1) + len(c.T2) + len(c.B1) + len(c.B2) <= 8
+        )  # 2c directory bound — the device encoding's lane budget

@@ -1,6 +1,7 @@
 """Batched sweep engine: bit-exact parity with per-trace scans and the host
 oracles, across set-associativity, mixed capacities (padded-ways masking),
-Pallas-kernel routing, and the sweep() dispatch layer."""
+Pallas-kernel routing, the array-encoded ARC/CAR adaptive policies, and the
+sweep() dispatch layer."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +10,8 @@ from _propcheck import given, settings, st  # hypothesis, or fallback shim
 
 from repro.core import make_policy, sweep
 from repro.core.jax_policies import (
+    ADAPTIVE_POLICIES,
+    DEVICE_POLICIES,
     JAX_POLICIES,
     access_sets,
     init_set_state,
@@ -35,17 +38,18 @@ def host_hits_sets(policy, trace, capacity, num_sets):
 
 @pytest.mark.parametrize("num_sets", [1, 4, 8])
 def test_batched_matches_host_oracles(num_sets):
-    """Every device policy x mixed capacities x 2 traces, one batch, vs the
-    host oracles — including the padded-ways masking for smaller caps."""
+    """Every device policy (flat AND adaptive) x mixed capacities x 2
+    traces, one batch, vs the host oracles — including the padded-ways /
+    padded-lanes masking for smaller caps."""
     rng = np.random.RandomState(3)
     traces = rng.randint(0, 80, size=(2, 400))
     caps = [8, 16, 32]  # mixed sizes in ONE batch (W padded to 32//num_sets)
     hits = np.asarray(
-        simulate_trace_batched(traces, JAX_POLICIES, caps, num_sets=num_sets)
+        simulate_trace_batched(traces, DEVICE_POLICIES, caps, num_sets=num_sets)
     )
-    assert hits.shape == (2, len(JAX_POLICIES), len(caps), 400)
+    assert hits.shape == (2, len(DEVICE_POLICIES), len(caps), 400)
     for n in range(2):
-        for pi, pol in enumerate(JAX_POLICIES):
+        for pi, pol in enumerate(DEVICE_POLICIES):
             for ci, cap in enumerate(caps):
                 ref = host_hits_sets(pol, traces[n], cap, num_sets)
                 divergence = np.flatnonzero(hits[n, pi, ci] != ref)
@@ -66,22 +70,24 @@ def test_batched_matches_per_trace_scan(policy):
 
 def test_padded_ways_masking_edge():
     """A 4-way cache padded into a 32-wide batch behaves exactly like a
-    4-way cache run alone (dead lanes never filled, never evicted from)."""
+    4-way cache run alone (dead lanes never filled, never evicted from) —
+    for the flat planes AND the adaptive 2*ways directory lanes."""
     tr = trace_zipf(500, 60, 0.9, seed=7)
-    mixed = np.asarray(simulate_trace_batched(tr, JAX_POLICIES, [4, 32]))
+    mixed = np.asarray(simulate_trace_batched(tr, DEVICE_POLICIES, [4, 32]))
     for ci, cap in enumerate([4, 32]):
-        solo = np.asarray(simulate_trace_batched(tr, JAX_POLICIES, [cap]))
+        solo = np.asarray(simulate_trace_batched(tr, DEVICE_POLICIES, [cap]))
         assert (mixed[:, :, ci] == solo[:, :, 0]).all(), f"cap={cap}"
 
 
 def test_kernel_routing_parity():
-    """Pallas rows-kernel victim selection == inline min-reduction."""
+    """Pallas rows-kernel victim selection == inline min-reduction (adaptive
+    rows ride along untouched in the same program)."""
     tr = trace_zipf(400, 50, 0.8, seed=1)
     on = np.asarray(
-        simulate_trace_batched(tr, JAX_POLICIES, [6, 24], use_kernel=True)
+        simulate_trace_batched(tr, DEVICE_POLICIES, [6, 24], use_kernel=True)
     )
     off = np.asarray(
-        simulate_trace_batched(tr, JAX_POLICIES, [6, 24], use_kernel=False)
+        simulate_trace_batched(tr, DEVICE_POLICIES, [6, 24], use_kernel=False)
     )
     assert (on == off).all()
 
@@ -110,11 +116,14 @@ def test_input_validation():
     with pytest.raises(ValueError, match="not divisible"):
         simulate_trace_batched(tr, ["awrp"], [9], num_sets=4)
     with pytest.raises(ValueError, match="not device policies"):
-        simulate_trace_batched(tr, ["car"], [8])
+        simulate_trace_batched(tr, ["2q"], [8])
     with pytest.raises(ValueError, match="fit int32"):
         simulate_trace_batched(np.array([1, -2]), ["awrp"], [8])
     with pytest.raises(ValueError, match="fit int32"):
         simulate_trace_batched(np.array([1, 2**32 - 1]), ["awrp"], [8])
+    # adaptive policies have no flat-state incremental form
+    with pytest.raises(ValueError, match="flat-state"):
+        access_sets(init_set_state(8, 2), jnp.asarray(1), policy="arc")
 
 
 # ---------------------------------------------------------------------------
@@ -123,11 +132,11 @@ def test_input_validation():
 
 
 def test_sweep_device_dispatch_bitexact():
-    """auto dispatch (device engine + host partition) == all-host sweep,
-    exactly — the Table-1 acceptance property."""
+    """auto dispatch (device engine incl. ARC/CAR + host partition) ==
+    all-host sweep, exactly — the Table-1 acceptance property."""
     tr = paper_trace()
     caps = [30, 60, 90, 120]
-    pols = ["lru", "fifo", "car", "awrp"]  # car forces a host partition
+    pols = ["lru", "fifo", "car", "2q", "arc", "awrp"]  # 2q: host partition
     auto = sweep(pols, tr, caps)
     host = sweep(pols, tr, caps, device=False)
     assert auto == host
@@ -136,7 +145,93 @@ def test_sweep_device_dispatch_bitexact():
 
 def test_sweep_device_true_rejects_host_only_policies():
     with pytest.raises(ValueError, match="no device implementation"):
-        sweep(["awrp", "arc"], [1, 2, 3], [4], device=True)
+        sweep(["awrp", "2q"], [1, 2, 3], [4], device=True)
+    # arc/car are device policies now and must NOT be rejected
+    res = sweep(["arc", "car"], [1, 2, 1, 3, 1, 2], [2], device=True)
+    assert set(res) == {"arc", "car"}
+
+
+# ---------------------------------------------------------------------------
+# adaptive (ARC/CAR) device parity — the oracle-vs-engine acceptance suite
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_simulate_trace_dispatch():
+    """simulate_trace() routes ARC/CAR through the batched engine (B=1) and
+    matches the host oracles exactly."""
+    tr = paper_trace()[:400]
+    for pol in ADAPTIVE_POLICIES:
+        ref = host_hits_sets(pol, tr, 48, 1)
+        got = np.asarray(simulate_trace(jnp.asarray(tr), 48, policy=pol))
+        assert (got == ref).all(), pol
+
+
+def test_adaptive_ghost_churn_parity():
+    """Tiny capacities maximize ghost-list traffic and p adaptation — the
+    regime where an encoding bug in B1/B2 order or the float32 p arithmetic
+    would surface first."""
+    rng = np.random.RandomState(11)
+    tr = rng.randint(0, 12, size=1500)
+    hits = np.asarray(simulate_trace_batched(tr, ADAPTIVE_POLICIES, [2, 3, 4, 6]))
+    for pi, pol in enumerate(ADAPTIVE_POLICIES):
+        for ci, cap in enumerate([2, 3, 4, 6]):
+            ref = host_hits_sets(pol, tr, cap, 1)
+            divergence = np.flatnonzero(hits[0, pi, ci] != ref)
+            assert divergence.size == 0, (
+                f"{pol} cap={cap}: first divergence at access {divergence[0]}"
+            )
+
+
+def test_adaptive_clock_sweep_stress_parity():
+    """Loop + phase-change traces drive CAR's clock hand through long
+    promotion runs (the bounded while-loop's worst case) and flip ARC's p
+    back and forth between the recency and frequency ends."""
+    rng = np.random.RandomState(5)
+    tr = np.concatenate(
+        [
+            np.tile(np.arange(10), 60),  # pure loop: every T1 page re-referenced
+            rng.randint(0, 12, size=600),  # hot working set: ref bits saturate
+            rng.randint(6, 40, size=600),  # phase change: ghost hits both ways
+            np.tile(np.arange(8), 40),
+        ]
+    )
+    hits = np.asarray(simulate_trace_batched(tr, ADAPTIVE_POLICIES, [4, 8, 16]))
+    for pi, pol in enumerate(ADAPTIVE_POLICIES):
+        for ci, cap in enumerate([4, 8, 16]):
+            ref = host_hits_sets(pol, tr, cap, 1)
+            assert (hits[0, pi, ci] == ref).all(), (pol, cap)
+
+
+def test_adaptive_paper_trace_full_parity():
+    """Full paper trace x Table-1 frame sizes — the exact grid the headline
+    AWRP-vs-CAR comparison runs on."""
+    tr = paper_trace()
+    caps = [30, 60, 90, 120, 150, 180, 210, 240]
+    hits = np.asarray(simulate_trace_batched(tr, ADAPTIVE_POLICIES, caps))
+    for pi, pol in enumerate(ADAPTIVE_POLICIES):
+        for ci, cap in enumerate(caps):
+            ref = host_hits_sets(pol, tr, cap, 1)
+            assert (hits[0, pi, ci] == ref).all(), (pol, cap)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    trace=st.lists(
+        st.integers(min_value=0, max_value=20), min_size=120, max_size=120
+    ),
+    num_sets=st.sampled_from([1, 2]),
+)
+def test_property_adaptive_host_parity(trace, num_sets):
+    """Arbitrary short traces, tiny caps, both set mappings: device ARC/CAR
+    decisions == host oracles, access for access."""
+    tr = np.asarray(trace, dtype=np.int64)
+    hits = np.asarray(
+        simulate_trace_batched(tr, ADAPTIVE_POLICIES, [4, 6], num_sets=num_sets)
+    )
+    for pi, pol in enumerate(ADAPTIVE_POLICIES):
+        for ci, cap in enumerate([4, 6]):
+            ref = host_hits_sets(pol, tr, cap, num_sets)
+            assert (hits[0, pi, ci] == ref).all(), (pol, cap, num_sets)
 
 
 # ---------------------------------------------------------------------------

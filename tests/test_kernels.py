@@ -54,6 +54,33 @@ def test_awrp_select_matches_host_policy():
         assert int(got[0]) == host.victim_slot()
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_awrp_select_tiebreak_parity_with_page_victim(seed):
+    """Per-row serving kernel (bit-pattern min-reduction) == page_victim's
+    jnp chain, on tie-heavy metadata: tiny F/R ranges force many exact
+    W = F/(N-R) collisions, so any first-index tie-break divergence between
+    the kernel and the decode-step fallback shows up immediately."""
+    from repro.core.kv_policy import page_victim
+
+    rng = np.random.RandomState(seed)
+    B, P = 8, 24
+    f = rng.randint(1, 4, size=(B, P)).astype(np.int32)
+    r = rng.randint(0, 5, size=(B, P)).astype(np.int32)
+    clock = rng.randint(5, 9, size=(B,)).astype(np.int32)
+    valid = (rng.rand(B, P) < 0.85).astype(np.int32)
+    valid[:, 0] = 1
+    pinned = (rng.rand(B, P) < 0.15).astype(np.int32) * valid
+    pinned[:, 0] = 0
+    got = ops.awrp_select(*map(jnp.asarray, (f, r, clock, valid, pinned)),
+                          interpret=True)
+    # page_victim masks on page_start >= 0 and a bool pinned plane
+    page_start = np.where(valid != 0, np.arange(P, dtype=np.int32)[None], -1)
+    want = page_victim("awrp", jnp.asarray(f), jnp.asarray(r),
+                       jnp.asarray(page_start), jnp.asarray(clock),
+                       jnp.asarray(pinned != 0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 @pytest.mark.parametrize("B,P", [(1, 8), (4, 64), (3, 130), (32, 256)])
 def test_awrp_select_rows_matches_ref(B, P):
     """Rows variant (one grid program, bit-pattern min-reduction) == the

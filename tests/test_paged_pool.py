@@ -4,6 +4,7 @@ to serving) — invariants under arbitrary decode streams."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _propcheck import given, settings, st  # hypothesis, or fallback shim
 
 from repro.cache import paged_kv
@@ -25,14 +26,7 @@ def _drive(pool, steps, page_size, kvd, policy="awrp", seed=0):
     return pool
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    pages=st.integers(min_value=2, max_value=6),
-    page_size=st.integers(min_value=2, max_value=8),
-    steps=st.integers(min_value=1, max_value=60),
-    policy=st.sampled_from(PAGE_POLICIES),
-)
-def test_pool_invariants_under_decode_stream(pages, page_size, steps, policy):
+def _check_pool_invariants(pages, page_size, steps, policy):
     B, kvd = 2, 8
     pool = paged_kv.init_pool(B, pages, page_size, kvd, jnp.float32)
     pool = _drive(pool, steps, page_size, kvd, policy=policy)
@@ -55,6 +49,110 @@ def test_pool_invariants_under_decode_stream(pages, page_size, steps, policy):
     # paper metadata sanity: F >= 1 on residents, R <= clock
     assert (f[resident] >= 1).all()
     assert (r[resident] <= steps).all()
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    pages=st.integers(min_value=2, max_value=6),
+    page_size=st.integers(min_value=2, max_value=8),
+    steps=st.integers(min_value=1, max_value=60),
+    policy=st.sampled_from(PAGE_POLICIES),
+)
+def test_pool_invariants_under_decode_stream(pages, page_size, steps, policy):
+    """Trimmed default-run variant (each example drives a full decode
+    stream, ~0.7s; the nightly variant below samples 3x more)."""
+    _check_pool_invariants(pages, page_size, steps, policy)
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(
+    pages=st.integers(min_value=2, max_value=6),
+    page_size=st.integers(min_value=2, max_value=8),
+    steps=st.integers(min_value=1, max_value=60),
+    policy=st.sampled_from(PAGE_POLICIES),
+)
+def test_pool_invariants_under_decode_stream_full(pages, page_size, steps, policy):
+    _check_pool_invariants(pages, page_size, steps, policy)
+
+
+# ---------------------------------------------------------------------------
+# page_victim: decision parity with the pre-port argmin formulation
+# ---------------------------------------------------------------------------
+
+
+def _page_victim_argmin_reference(policy, f, r, page_start, clock, pinned):
+    """The original argmin-based page_victim (reference for the min-reduction
+    port — kept verbatim so the switch is provably decision-identical)."""
+    INT_MAX = 2**31 - 1
+    from repro.core.jax_policies import awrp_weights
+
+    valid = (page_start >= 0) & ~pinned
+    if policy == "awrp":
+        w = awrp_weights(f, r, clock[:, None])
+        return jnp.argmin(jnp.where(valid, w, jnp.inf), axis=-1).astype(jnp.int32)
+    if policy == "lru":
+        return jnp.argmin(jnp.where(valid, r, INT_MAX), axis=-1).astype(jnp.int32)
+    if policy == "fifo":
+        return jnp.argmin(
+            jnp.where(valid, page_start, INT_MAX), axis=-1
+        ).astype(jnp.int32)
+    if policy == "lfu":
+        fm = jnp.where(valid, f, INT_MAX)
+        minf = jnp.min(fm, axis=-1, keepdims=True)
+        cand = fm == minf
+        return jnp.argmin(jnp.where(cand, r, INT_MAX), axis=-1).astype(jnp.int32)
+    raise ValueError(policy)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    P=st.sampled_from([3, 7, 8]),  # few shapes -> jit caches across examples
+    seed=st.integers(min_value=0, max_value=2000),
+)
+def test_page_victim_matches_argmin_reference(P, seed):
+    """Min-reduction chain == the old argmin formulation, including engineered
+    weight/recency ties and pinned/free lanes (first-index tie-break)."""
+    rng = np.random.RandomState(seed)
+    B = 4
+    # tiny value ranges force frequent exact ties in W = F/(N-R), r and f
+    f = jnp.asarray(rng.randint(1, 4, size=(B, P)), jnp.int32)
+    r = jnp.asarray(rng.randint(0, 6, size=(B, P)), jnp.int32)
+    starts = jnp.asarray(rng.randint(0, 4, size=(B, P)) * 4, jnp.int32)
+    clock = jnp.asarray(rng.randint(6, 10, size=(B,)), jnp.int32)
+    starts = jnp.where(jnp.asarray(rng.rand(B, P) < 0.2), -1, starts)
+    pinned = jnp.asarray(rng.rand(B, P) < 0.2)
+    for policy in ("awrp", "lru", "fifo", "lfu"):
+        got = np.asarray(page_victim(policy, f, r, starts, clock, pinned))
+        want = np.asarray(
+            _page_victim_argmin_reference(policy, f, r, starts, clock, pinned)
+        )
+        np.testing.assert_array_equal(got, want, err_msg=policy)
+
+
+def test_page_victim_arc_car_segment_semantics():
+    """Serving-layer arc/car: once-referenced (T1-analog) pages evict before
+    multiply-referenced ones; arc orders the segment by recency, car by
+    insertion (clock) order; both fall back to the hot segment when every
+    page is hot."""
+    f = jnp.asarray([[3, 1, 1, 2]], jnp.int32)
+    r = jnp.asarray([[9, 5, 3, 2]], jnp.int32)
+    starts = jnp.asarray([[0, 12, 8, 4]], jnp.int32)
+    clock = jnp.asarray([10], jnp.int32)
+    pinned = jnp.zeros((1, 4), bool)
+    # cold segment = pages 1, 2 (f == 1)
+    assert int(page_victim("arc", f, r, starts, clock, pinned)[0]) == 2  # min r
+    assert int(page_victim("car", f, r, starts, clock, pinned)[0]) == 2  # min start
+    starts2 = jnp.asarray([[0, 8, 12, 4]], jnp.int32)
+    assert int(page_victim("car", f, r, starts2, clock, pinned)[0]) == 1
+    # all pages hot -> T2-analog: arc == lru, car == fifo
+    f_hot = jnp.asarray([[3, 2, 5, 2]], jnp.int32)
+    assert int(page_victim("arc", f_hot, r, starts, clock, pinned)[0]) == int(
+        page_victim("lru", f_hot, r, starts, clock, pinned)[0]
+    )
+    assert int(page_victim("car", f_hot, r, starts, clock, pinned)[0]) == int(
+        page_victim("fifo", f_hot, r, starts, clock, pinned)[0]
+    )
 
 
 @settings(max_examples=20, deadline=None)
