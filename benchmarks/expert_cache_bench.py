@@ -1,11 +1,15 @@
 """MoE expert-cache bench: miss rate == host->HBM transfer volume under each
-policy, on router traces from the two assigned MoE archs' configurations."""
+policy, on router traces from the two assigned MoE archs' configurations;
+plus the batched device runtime path (one (n_layers,)-row policy-core step
+per router batch, DESIGN.md §7) vs the per-layer host dict-oracle loop."""
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.cache.expert_cache import simulate_router_trace
+from repro.cache.expert_cache import ExpertCacheRuntime, simulate_router_trace
 
 CASES = [
     # (name, experts, cache_capacity, expert MB, zipf a, phases)
@@ -39,6 +43,31 @@ def run(out_lines=None):
             for p in pols:
                 out_lines.append(
                     f"expert_{name}_{p},0,{100*res[p]['hit_ratio']:.2f}%")
+
+    # runtime paths: per-layer host oracles vs the batched device core
+    # (identical accounting — parity-tested; here we time the two paths)
+    n_layers, cap, k, steps = 16, 8, 2, 400
+    rng = np.random.RandomState(1)
+    route = rng.zipf(1.3, size=(steps, n_layers, k)) % 16
+    rows = {}
+    for device in (False, True):
+        rt = ExpertCacheRuntime(n_layers, cap, policy="awrp", device=device)
+        # untimed warmup step (same on both paths, so accounting stays
+        # comparable): excludes the device path's one-off jit compile —
+        # the step function's cache lives on the runtime instance
+        rt.route_step(route[0])
+        t0 = time.perf_counter()
+        for s in range(1, steps):
+            rt.route_step(route[s])
+        dt = (time.perf_counter() - t0) / (steps - 1) * 1e6
+        rows[device] = (dt, rt.hit_ratio)
+    assert rows[False][1] == rows[True][1], "device path accounting diverged"
+    print(f"  runtime route_step ({n_layers} layers x top-{k}): "
+          f"host {rows[False][0]:.0f}us | device {rows[True][0]:.0f}us "
+          f"per step (identical hit ratio {100*rows[False][1]:.1f}%)")
+    if out_lines is not None:
+        out_lines.append(f"expert_runtime_host,{rows[False][0]:.0f},us_per_step")
+        out_lines.append(f"expert_runtime_device,{rows[True][0]:.0f},us_per_step")
     return None
 
 

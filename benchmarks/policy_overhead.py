@@ -49,11 +49,15 @@ def device_us_per_access(policy: str, trace, cap) -> float:
     return (time.perf_counter() - t0) / 3 / len(trace) * 1e6
 
 
-def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000):
+def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000,
+                          sweep_json=None):
     """The COMPLETE six-policy Table-1 grid (awrp/lru/fifo/lfu + the
     array-encoded arc/car x all frame sizes) as ONE jitted program vs the
     host oracle loop, plus a kernel-routed run — the Pallas
-    awrp_select_rows path the sweep exercises on TPU."""
+    awrp_select_rows path the sweep exercises on TPU.  ``sweep_json``
+    additionally writes the grid throughput + speedup record
+    (BENCH_sweep.json, a CI artifact tracking the perf trajectory
+    PR-over-PR)."""
     tr = trace_zipf(n_accesses, 2_000, 0.9, seed=5)
     grid = len(DEVICE_POLICIES) * len(SWEEP_CAPS)
 
@@ -95,9 +99,29 @@ def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000):
         out_lines.append(
             f"batched_sweep_grid_kernel,{1e6 * ker_s / n_accesses:.2f},"
             f"{host_s / ker_s:.1f}x_vs_host")
+    if sweep_json is not None:
+        import json
+
+        record = {
+            "n_accesses": n_accesses,
+            "grid_configs": grid,
+            "policies": list(DEVICE_POLICIES),
+            "capacities": list(SWEEP_CAPS),
+            "host_loop_s": round(host_s, 4),
+            "device_grid_s": round(dev_s, 4),
+            "device_grid_kernel_s": round(ker_s, 4),
+            "grid_accesses_per_s": round(n_accesses / dev_s, 1),
+            "speedup_vs_host": round(host_s / dev_s, 2),
+            "speedup_vs_host_kernel": round(host_s / ker_s, 2),
+            "parity_with_host_oracles": bool(parity),
+        }
+        with open(sweep_json, "w") as fh:
+            json.dump(record, fh, indent=2)
+            fh.write("\n")
+        print(f"(sweep record written to {sweep_json})")
 
 
-def run(out_lines=None, smoke: bool = False):
+def run(out_lines=None, smoke: bool = False, sweep_json=None):
     trace = TRACE[:5_000] if smoke else TRACE
     print("== policy overhead ==")
     print(f"{'policy':>8} | host us/access | device us/access (lax.scan)")
@@ -116,7 +140,8 @@ def run(out_lines=None, smoke: bool = False):
     print(f"AWRP lazy-weight speedup over WRP: {w / a:.2f}x")
     if out_lines is not None:
         out_lines.append(f"awrp_vs_wrp_speedup,{a:.2f},{w / a:.2f}x")
-    batched_sweep_speedup(out_lines, n_accesses=10_000 if smoke else 100_000)
+    batched_sweep_speedup(out_lines, n_accesses=10_000 if smoke else 100_000,
+                          sweep_json=sweep_json)
 
 
 if __name__ == "__main__":

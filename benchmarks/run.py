@@ -41,6 +41,11 @@ def main(argv=None) -> None:
     ap.add_argument("--sections", default=None,
                     help="comma-separated section keys to run (default: all, "
                     "or SMOKE_SECTIONS with --smoke)")
+    ap.add_argument("--sweep-json", metavar="PATH", default=None,
+                    help="write the batched-sweep grid throughput + "
+                    "speedup-vs-host record (BENCH_sweep.json) to PATH — "
+                    "uploaded as a CI artifact to track the perf trajectory "
+                    "PR-over-PR")
     args = ap.parse_args(argv)
 
     out_lines = []
@@ -49,10 +54,13 @@ def main(argv=None) -> None:
     def section(name, fn):
         print(f"\n{'='*72}\n{name}\n{'='*72}")
         try:
-            if "smoke" in inspect.signature(fn).parameters:
-                fn(out_lines, smoke=args.smoke)
-            else:
-                fn(out_lines)
+            kw = {}
+            params = inspect.signature(fn).parameters
+            if "smoke" in params:
+                kw["smoke"] = args.smoke
+            if "sweep_json" in params:
+                kw["sweep_json"] = args.sweep_json
+            fn(out_lines, **kw)
             sections.append((name, "ok"))
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
@@ -65,6 +73,7 @@ def main(argv=None) -> None:
         kernel_bench,
         policy_overhead,
         roofline_report,
+        serve_policy_bench,
         serve_quality_bench,
         table1,
         trace_suite,
@@ -80,6 +89,10 @@ def main(argv=None) -> None:
             "Policy overhead + batched sweep engine (paper §3 overhead claim)",
             policy_overhead.run),
         "kernel_bench": ("Kernel bench", kernel_bench.run),
+        "serve_policy": (
+            "Paged-KV policy ablation (classic vs true-adaptive, "
+            "identical decode traces)",
+            serve_policy_bench.run),
         "serve_quality": (
             "Bounded-KV serving quality (AWRP vs baselines)",
             serve_quality_bench.run),

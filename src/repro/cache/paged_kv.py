@@ -11,6 +11,23 @@ mass exceeds tau = 1/num_resident_pages; eviction on pool-full allocation is
 All arrays carry leading (B,) — one policy instance per sequence — and the
 model stacks a further (n_repeats,) layer dim scanned by lax.scan (one policy
 instance per layer, since attention mass differs per layer).
+
+Two eviction modes (both policy-pluggable through the unified core,
+DESIGN.md §7):
+
+* **classic** (``insert_token``/``score_update``): stateless decisions over
+  the (F, R, page_start) metadata via ``repro.core.kv_policy.page_victim``
+  — awrp/lru/fifo/lfu exactly, arc/car as two-segment approximations.
+* **true-adaptive** (``adaptive_insert_token``/``adaptive_score_update``):
+  the pool carries ``policy_core.AdaptiveState`` planes per (B,) sequence —
+  ghost directory, stamps and the self-tuning ``p`` — so eviction runs the
+  REAL ARC/CAR, bit-identical to the host oracles and the sweep engine on
+  the pool's access stream (page allocations are complete misses, per-step
+  references are hits issued in slot order; parity-tested in
+  tests/test_adaptive_kv.py).  Note the stream's structure: page ids only
+  grow, so ghost *hits* cannot occur during decode — ``p`` stays put but
+  the T1/T2 once-vs-multiply-referenced segmentation, LRU/clock-hand order
+  and reference-bit promotion are live and exact.
 """
 
 from __future__ import annotations
@@ -20,9 +37,17 @@ from typing import Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_policies import awrp_weights
+from repro.core.policy_core import (
+    AdaptiveCore,
+    AdaptiveState,
+    awrp_victim_rows,
+    first_min,
+)
 
 INT_MAX = 2**31 - 1
+
+#: kv_policy names served by the true-adaptive pool mode -> core policy
+TRUE_ADAPTIVE_KV = {"arc_adaptive": "arc", "car_adaptive": "car"}
 
 
 class PagedPool(NamedTuple):
@@ -70,14 +95,10 @@ def awrp_victim(
     pinned: jax.Array,  # (B, P) bool — excluded (the open page)
 ) -> jax.Array:
     """Vectorized eq. (1) victim select; same float32 ops / first-index
-    tie-break as the host oracle (bit-exact, property-tested).  Selection is
-    the bit-pattern min-reduction (w >= 0, so IEEE order == int32 bit
-    order), not argmin — see repro.core.kv_policy."""
-    from repro.core.kv_policy import first_min
-
-    w = awrp_weights(f, r, clock[:, None])
-    bits = jax.lax.bitcast_convert_type(w, jnp.int32)
-    return first_min(jnp.where(valid & ~pinned, bits, INT_MAX))  # (B,)
+    tie-break as the host oracle (bit-exact, property-tested).  A core-level
+    dispatch (``policy_core.awrp_victim_rows``): the bit-pattern
+    min-reduction (w >= 0, so IEEE order == int32 bit order), not argmin."""
+    return awrp_victim_rows(f, r, clock, valid & ~pinned)  # (B,)
 
 
 def insert_token(
@@ -141,22 +162,203 @@ def kv_positions(pool: PagedPool, pos: jax.Array, page_size: int) -> jax.Array:
     return jnp.where(valid, tok, -1).reshape(B, P * page_size)
 
 
+def referenced_pages(
+    pool: PagedPool,
+    attn_mass: jax.Array,  # (B, P*page) softmax mass per cache row
+    page_size: int,
+) -> jax.Array:
+    """Paper hit rule on pages: a resident page is *referenced* this decode
+    step iff its attention mass >= tau = 1/resident_count.  The single
+    definition both pool modes (classic F/R metadata and the true-adaptive
+    policy stream) consume — returns a (B, P) bool mask."""
+    B, P = pool.f.shape
+    mass = attn_mass.reshape(B, P, page_size).sum(-1)  # (B, P)
+    resident = (pool.page_start >= 0).sum(-1, keepdims=True)  # (B, 1)
+    tau = 1.0 / jnp.maximum(resident.astype(jnp.float32), 1.0)
+    return (mass >= tau) & (pool.page_start >= 0)
+
+
 def score_update(
     pool: PagedPool,
     attn_mass: jax.Array,  # (B, P*page) softmax mass per cache row
     page_size: int,
 ) -> PagedPool:
-    """Paper hit rule on pages: referenced iff mass >= 1/resident_count;
-    F += 1 and R = N on reference.  One clock tick per decode step."""
-    B, P = pool.f.shape
-    mass = attn_mass.reshape(B, P, page_size).sum(-1)  # (B, P)
-    resident = (pool.page_start >= 0).sum(-1, keepdims=True)  # (B, 1)
-    tau = 1.0 / jnp.maximum(resident.astype(jnp.float32), 1.0)
+    """Apply the paper hit rule (``referenced_pages``): F += 1 and R = N on
+    reference.  One clock tick per decode step."""
+    referenced = referenced_pages(pool, attn_mass, page_size)
     clock = pool.clock + 1
-    referenced = (mass >= tau) & (pool.page_start >= 0)
     f = jnp.where(referenced, pool.f + 1, pool.f)
     r = jnp.where(referenced, clock[:, None], pool.r)
     return pool._replace(f=f, r=r, clock=clock)
+
+
+# ---------------------------------------------------------------------------
+# true-adaptive (ARC/CAR) pool mode — AdaptiveState planes per sequence
+# ---------------------------------------------------------------------------
+
+
+class AdaptivePagedPool(NamedTuple):
+    """Paged pool + the unified core's adaptive policy planes: the ghost
+    directory (2P lanes), within-list stamps and the self-tuning ``p`` that
+    the classic pool's (F, R) metadata cannot carry.  The ``pool`` member's
+    F/R/clock keep ticking for telemetry; eviction decisions come from
+    ``policy`` via the REAL ARC/CAR step functions."""
+
+    pool: PagedPool
+    policy: AdaptiveState  # (B, 1, 2P) planes + (B, 1) scalars
+
+
+def adaptive_core(kv_policy: str, batch: int, pages: int) -> AdaptiveCore:
+    """The pool's policy core: one ARC/CAR instance per sequence, capacity =
+    the page pool size.  ``kv_policy`` accepts the serving names
+    (``arc_adaptive``/``car_adaptive``) or the core names (``arc``/``car``)."""
+    kind = TRUE_ADAPTIVE_KV.get(kv_policy, kv_policy)
+    return AdaptiveCore(kind=kind, caps=(pages,) * batch)
+
+
+def init_adaptive_pool(
+    batch: int, pages: int, page_size: int, kvd: int, dtype, kv_policy: str
+) -> AdaptivePagedPool:
+    return AdaptivePagedPool(
+        pool=init_pool(batch, pages, page_size, kvd, dtype),
+        policy=adaptive_core(kv_policy, batch, pages).init(),
+    )
+
+
+def abstract_adaptive_pool(
+    batch: int, pages: int, page_size: int, kvd: int, dtype, kv_policy: str
+) -> AdaptivePagedPool:
+    sds = jax.ShapeDtypeStruct
+    L = 2 * pages
+    return AdaptivePagedPool(
+        pool=abstract_pool(batch, pages, page_size, kvd, dtype),
+        policy=AdaptiveState(
+            blocks=sds((batch, 1, L), jnp.int32),
+            tag=sds((batch, 1, L), jnp.int32),
+            stamp=sds((batch, 1, L), jnp.int32),
+            ref=sds((batch, 1, L), jnp.int32),
+            p=sds((batch, 1), jnp.float32),
+            ctr=sds((batch, 1), jnp.int32),
+        ),
+    )
+
+
+def seed_adaptive_state(
+    batch: int, pages: int, first_page: int, n_res: int
+) -> AdaptiveState:
+    """Adaptive-policy counterpart of ``pool_from_prefill``'s seeding: the
+    ``n_res`` resident pages (ids ``first_page..first_page+n_res-1``) enter
+    as complete-miss insertions in order — all in T1, stamps in insertion
+    order, ``p = 0``, empty ghost lists.  This is exactly the state the host
+    ARC/CAR oracles reach on that access stream (the ctr value itself never
+    affects decisions, only the stamp order does)."""
+    from repro.core.policy_core import _TAG_T1
+
+    L = 2 * pages
+    lane = jnp.arange(L, dtype=jnp.int32)
+    res = lane < n_res
+    one_seq = lambda a: jnp.broadcast_to(a, (batch, 1, L))  # noqa: E731
+    return AdaptiveState(
+        blocks=one_seq(jnp.where(res, first_page + lane, -1)),
+        tag=one_seq(jnp.where(res, _TAG_T1, 0)),
+        stamp=one_seq(jnp.where(res, lane + 1, 0)),
+        ref=jnp.zeros((batch, 1, L), jnp.int32),
+        p=jnp.zeros((batch, 1), jnp.float32),
+        ctr=jnp.full((batch, 1), n_res, jnp.int32),
+    )
+
+
+def adaptive_insert_token(
+    apool: AdaptivePagedPool,
+    new_k: jax.Array,  # (B, kvd)
+    new_v: jax.Array,  # (B, kvd)
+    pos: jax.Array,  # scalar int32 — token index being written
+    page_size: int,
+    core: AdaptiveCore,
+) -> AdaptivePagedPool:
+    """``insert_token`` with TRUE arc/car eviction: a page-boundary
+    allocation is one complete-miss access of the new page id; the policy's
+    REPLACE step picks the page to demote out of the cache (into its ghost
+    list) and the pool reuses that page's slot.  Residency stays coherent by
+    construction — every allocation is an access, every policy eviction
+    frees exactly one pool slot, and references never evict.  Branch-free;
+    runs under jit/scan."""
+    pool, pstate = apool
+    B, P = pool.f.shape
+    within = (pos % page_size).astype(jnp.int32)
+    need_alloc = within == 0
+    page_id = (pos // page_size).astype(jnp.int32)
+
+    # policy access (masked: no-op between page boundaries)
+    new_pstate, _ = core.on_access(
+        pstate, jnp.broadcast_to(page_id, (B,)),
+        active=jnp.broadcast_to(need_alloc, (B,)),
+    )
+    # the page REPLACE demoted (if any): resident before, ghost/gone after
+    res_b = core.resident_mask(pstate)[:, 0]  # (B, 2P)
+    res_a = core.resident_mask(new_pstate)[:, 0]
+    evicted = res_b & ~res_a
+    ev_id = jnp.max(jnp.where(evicted, pstate.blocks[:, 0], -1), axis=-1)  # (B,)
+
+    # map the evicted page id to its pool slot; no eviction -> first free
+    pool_pid = jnp.where(pool.page_start >= 0, pool.page_start // page_size, -2)
+    victim = first_min(jnp.where(pool_pid == ev_id[:, None], 0, 1))
+    free = pool.page_start < 0
+    first_free = first_min(jnp.where(free, 0, 1))
+    alloc_slot = jnp.where(ev_id >= 0, victim, first_free)  # (B,)
+    slot = jnp.where(need_alloc, alloc_slot, pool.open_slot)
+
+    bidx = jnp.arange(B)
+    # metadata upkeep mirrors the classic pool (paper insert rule: F=1, R=N)
+    # so telemetry and kv_positions stay uniform across modes
+    f = pool.f.at[bidx, slot].set(jnp.where(need_alloc, 1, pool.f[bidx, slot]))
+    r = pool.r.at[bidx, slot].set(
+        jnp.where(need_alloc, pool.clock, pool.r[bidx, slot])
+    )
+    page_start = pool.page_start.at[bidx, slot].set(
+        jnp.where(need_alloc, pos, pool.page_start[bidx, slot])
+    )
+    zero_row = jnp.zeros_like(pool.k[:, 0])  # (B, page, kvd)
+    k = pool.k.at[bidx, slot].set(
+        jnp.where(need_alloc, zero_row, pool.k[bidx, slot])
+    )
+    v = pool.v.at[bidx, slot].set(
+        jnp.where(need_alloc, zero_row, pool.v[bidx, slot])
+    )
+    k = k.at[bidx, slot, within].set(new_k)
+    v = v.at[bidx, slot, within].set(new_v)
+    open_slot = jnp.where(need_alloc, slot, pool.open_slot).astype(jnp.int32)
+    return AdaptivePagedPool(
+        pool=PagedPool(k, v, f, r, page_start, pool.clock, open_slot),
+        policy=new_pstate,
+    )
+
+
+def adaptive_score_update(
+    apool: AdaptivePagedPool,
+    attn_mass: jax.Array,  # (B, P*page) softmax mass per cache row
+    page_size: int,
+    core: AdaptiveCore,
+) -> AdaptivePagedPool:
+    """``score_update`` with TRUE arc/car bookkeeping: every referenced page
+    (paper hit rule, mass >= 1/resident_count) is one policy HIT access —
+    ARC promotes T1 pages to T2 / restamps T2's MRU, CAR sets reference
+    bits.  Multiple references in one decode step are issued in slot order
+    (the mode's documented tie order); hits never evict, so the bounded
+    per-step loop is P masked accesses."""
+    pool, pstate = apool
+    B, P = pool.f.shape
+    referenced = referenced_pages(pool, attn_mass, page_size)
+    # classic metadata upkeep (F/R/clock telemetry) — same rule, same tick
+    pool = score_update(pool, attn_mass, page_size)
+    page_ids = jnp.where(pool.page_start >= 0, pool.page_start // page_size, 0)
+
+    def body(s, st):
+        st, _ = core.on_access(st, page_ids[:, s], active=referenced[:, s])
+        return st
+
+    pstate = jax.lax.fori_loop(0, P, body, pstate)
+    return AdaptivePagedPool(pool=pool, policy=pstate)
 
 
 # ---------------------------------------------------------------------------

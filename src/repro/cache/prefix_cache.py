@@ -12,11 +12,11 @@ would be the production unit — the accounting hooks are `entry_bytes`).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 
-from repro.core.policies import make_policy
+from repro.core.policy_core import make_cache_policy
 
 
 def prompt_key(tokens) -> int:
@@ -26,7 +26,9 @@ def prompt_key(tokens) -> int:
 
 class PrefixCache:
     def __init__(self, capacity: int = 16, policy: str = "awrp"):
-        self.policy = make_policy(policy, capacity)
+        # the unified serving factory (DESIGN.md §7): accepts a policy name
+        # or a prebuilt ReplacementPolicy instance
+        self.policy = make_cache_policy(policy, capacity)
         self.store: Dict[int, Any] = {}
         self.hits = 0
         self.misses = 0
@@ -57,6 +59,16 @@ class PrefixCache:
     def hit_ratio(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
+
+    def telemetry(self) -> dict:
+        """Uniform per-cache stats (the serving engine's one code path)."""
+        return {
+            "policy": self.policy.name,
+            "entries": len(self.store),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_ratio": self.hit_ratio,
+        }
 
     def entry_bytes(self) -> int:
         return sum(

@@ -101,7 +101,9 @@ class ModelConfig:
     # serving / paged KV (the paper's technique)
     page_size: int = 64
     bounded_kv_pages: int = 256  # resident page pool for long_500k AWRP mode
-    kv_policy: str = "awrp"  # awrp | lru | lfu | fifo
+    # awrp | lru | lfu | fifo | arc | car (stateless two-segment) |
+    # arc_adaptive | car_adaptive (TRUE adaptive: AdaptiveState in the pool)
+    kv_policy: str = "awrp"
     force_paged_decode: bool = False  # AWRP-bounded pool for decode_32k too
     # numerics / execution
     dtype: str = "bfloat16"

@@ -40,10 +40,27 @@ _DEVICE_EXPORTS = (
     "simulate_trace_batched",
 )
 
+#: the unified PolicyState core (DESIGN.md §7) — same lazy-resolution rule
+_CORE_EXPORTS = (
+    "FlatCore",
+    "AdaptiveCore",
+    "PolicyCore",
+    "FlatState",
+    "PolicyState",
+    "make_core",
+    "make_cache_policy",
+    "awrp_victim_rows",
+    "first_min",
+)
+
 
 def __getattr__(name):
     if name in _DEVICE_EXPORTS:
         from . import jax_policies
 
         return getattr(jax_policies, name)
+    if name in _CORE_EXPORTS:
+        from . import policy_core
+
+        return getattr(policy_core, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,9 +2,16 @@
 
 This is the paper's core contribution adapted to TPU: AWRP's state is two
 integer vectors ``(F, R)`` plus a scalar clock; the weight ``W = F/(N-R)`` is
-one VPU elementwise pass and the eviction decision one ``argmin``.  No lists,
-no pointers, no per-hit data movement — which is precisely the overhead
-argument the paper makes against LRU/ARC/CAR, realized on SIMD hardware.
+one VPU elementwise pass and the eviction decision one masked min-reduction.
+No lists, no pointers, no per-hit data movement — which is precisely the
+overhead argument the paper makes against LRU/ARC/CAR, realized on SIMD
+hardware.
+
+The policy *decision logic* lives in ``repro.core.policy_core`` — the
+uniform ``PolicyState`` protocol (``make_core / init / on_access / victim``)
+shared with the serving caches (DESIGN.md §7).  This module keeps the
+single-cache convenience API and the batched sweep engine, both now thin
+drivers over that core:
 
 API::
 
@@ -20,37 +27,49 @@ Batched sweep engine (the Table-1 grid as ONE device program)::
     hits = simulate_trace_batched(traces, ["awrp", "lru"], [30, 60, 240],
                                   num_sets=4)
 
-The engine's state is set-associative: per-config arrays of shape
-``(num_sets, ways)`` with set index ``block % num_sets``, and every config in
-the (trace, policy, capacity) grid flattened onto one leading batch axis.
-Smaller capacities are padded to the widest config's ``ways`` with dead lanes
-that are masked out of both the first-empty fill and the victim argmin.
-Batching is explicit (flattened grid) rather than nested ``vmap`` so AWRP
-victim selection can route through the Pallas kernel
-(``repro.kernels.awrp_select_rows``) in its native ``(B, P)`` layout — one
-kernel invocation per trace step covers the entire grid.
+The engine's state is set-associative: per-config ``PolicyState`` planes of
+shape ``(rows, num_sets, ways)`` with set index ``block % num_sets``, and
+every config in the (trace, policy, capacity) grid flattened onto one
+leading rows axis.  Smaller capacities are padded to the widest config's
+``ways`` with dead lanes that are masked out of both the first-empty fill
+and the victim reduction.  Batching is explicit (flattened grid) rather
+than nested ``vmap`` so AWRP victim selection can route through the Pallas
+kernel (``repro.kernels.awrp_select_rows``) in its native ``(B, P)`` layout
+— a core-level dispatch (``policy_core.awrp_victim_rows``), one kernel
+invocation per trace step covering the entire grid.
 
 Decision parity with ``repro.core.policies`` oracles is property-tested
-bit-exactly (same float32 weight arithmetic, same first-index argmin).
+bit-exactly (same float32 weight arithmetic, same first-index ordering).
 
 ARC and CAR — the paper's headline adaptive competitors — ALSO run on the
 device engine: their pointer-based lists are re-expressed as fixed-capacity
-array state (a tag plane for T1/T2/B1/B2 membership, a stamp plane for
-within-list order, a reference-bit plane for CAR's clocks, and per-lane
-``p``/counter scalars), with CAR's clock-hand sweep as a bounded masked
-min-reduction loop.  See DESIGN.md §2 for the encoding and the argument
-that it reproduces the host oracles' decisions exactly.  Only 2Q/OPT/RANDOM
-remain host-only.
+array state (``policy_core.AdaptiveState``; see DESIGN.md §2/§7).  There is
+no trace-length limit: the adaptive stamp counter renormalizes in place
+before it can overflow.  Only 2Q/OPT/RANDOM remain host-only.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.policy_core import (
+    ADAPTIVE_POLICIES,
+    DEVICE_POLICIES,
+    INT_MAX,
+    JAX_POLICIES,
+    POLICY_IDS,
+    AdaptiveCore,
+    AdaptiveState,
+    FlatCore,
+    FlatState,
+    awrp_weights,
+    init_adaptive_state,
+)
 
 __all__ = [
     "CacheState",
@@ -71,24 +90,6 @@ __all__ = [
     "simulate_trace_sets",
     "simulate_trace_batched",
 ]
-
-INT_MAX = np.iinfo(np.int32).max
-
-#: flat-state policies: one (blocks, F, R) slot array is their entire state,
-#: so they run everywhere (``access``/``simulate_trace``/the batched engine).
-JAX_POLICIES = ("awrp", "lru", "fifo", "lfu")
-
-#: list-structured adaptive policies, device-capable via the array encoding
-#: below (batched engine only — they have no flat ``CacheState`` form).
-ADAPTIVE_POLICIES = ("arc", "car")
-
-#: everything ``simulate_trace_batched`` / ``sweep(device=...)`` accepts.
-DEVICE_POLICIES = JAX_POLICIES + ADAPTIVE_POLICIES
-
-#: stable integer encoding of the device policies (the batched engine's
-#: policy axis); consumed by name via ``_make_masks``, so the numbering is
-#: arbitrary but must stay stable within a jitted program.
-POLICY_IDS = {name: i for i, name in enumerate(DEVICE_POLICIES)}
 
 
 class CacheState(NamedTuple):
@@ -112,13 +113,6 @@ def init_state(capacity: int) -> CacheState:
     )
 
 
-def awrp_weights(f: jax.Array, r: jax.Array, clock: jax.Array) -> jax.Array:
-    """Paper eq. (1): W_i = F_i / (N - R_i), float32, residents only
-    (callers mask empties to +inf)."""
-    dt = jnp.maximum(clock - r, 1).astype(jnp.float32)
-    return f.astype(jnp.float32) / dt
-
-
 def victim_slot(state: CacheState, policy: str) -> jax.Array:
     """Index of the eviction victim under ``policy`` (assumes a full cache;
     empty slots are masked out so a partially-filled cache is also safe)."""
@@ -140,7 +134,7 @@ def victim_slot(state: CacheState, policy: str) -> jax.Array:
     if policy in ADAPTIVE_POLICIES:
         raise ValueError(
             f"{policy!r} has no flat CacheState form — its T1/T2/B1/B2 lists "
-            "live in AdaptiveState planes inside the batched engine; use "
+            "live in AdaptiveState planes inside the policy core; use "
             "simulate_trace / simulate_trace_sets / simulate_trace_batched"
         )
     raise ValueError(f"unknown device policy {policy!r}; have {JAX_POLICIES}")
@@ -203,39 +197,16 @@ def simulate_trace(trace, capacity: int, *, policy: str = "awrp") -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Batched set-associative sweep engine
+# Batched set-associative sweep engine — a thin scan driver over the
+# PolicyState cores (repro.core.policy_core; design notes in DESIGN.md §2/§7)
 # ---------------------------------------------------------------------------
-#
-# Engineering notes (benchmarked on CPU jax; see benchmarks/policy_overhead.py):
-#
-#  * State is three int32 planes — blocks / F / R — where R doubles as the
-#    FIFO insertion clock (FIFO simply freezes R on hits).  Fewer planes =
-#    fewer bytes the scan carry touches per step, which is the cost floor.
-#  * Empty-lane fill is FOLDED INTO the victim key: an empty lane has
-#    F = R = 0, so its key (weight 0 / recency 0 / frequency 0) beats every
-#    occupied lane under all four policies and ties break to the lowest lane
-#    index — exactly the host oracles' first-empty fill order.  No separate
-#    first-empty reduction.
-#  * No argmin/argmax anywhere: XLA CPU lowers argmin to a slow scalar
-#    reduce (~30x worse than min on float32).  Every selection is a chain of
-#    vectorizable min-reductions; AWRP's float32 weights are compared by
-#    their bit patterns (non-negative IEEE floats order identically to their
-#    int32 bits), which is also how the Pallas rows kernel does it.
-#  * The decision ordering is bit-identical to the host oracles either way —
-#    property-tested in tests/test_batched_sweep.py.
 
 
-class SetCacheState(NamedTuple):
-    """Set-associative cache state.  Leading axes are free batch axes; the
-    batched engine uses ``(B, num_sets, ways)`` with B = the flattened
-    (trace, policy, capacity) grid.  ``blocks == -1`` marks an empty lane;
-    dead lanes (capacity padding) are identified by a mask in the engine,
-    never by a sentinel."""
-
-    blocks: jax.Array  # (..., S, W) int32, -1 = empty
-    f: jax.Array  # (..., S, W) int32 frequency counters
-    r: jax.Array  # (..., S, W) int32 recency clock (insertion clock for FIFO)
-    clock: jax.Array  # (..., S) int32 per-set access clock N
+#: Set-associative cache state for the incremental single-cache API
+#: (``init_set_state``/``access_sets``): ``(num_sets, ways)`` planes with a
+#: ``(num_sets,)`` clock — exactly the core's ``FlatState`` layout, so the
+#: two are one type (field-for-field duplication would just drift).
+SetCacheState = FlatState
 
 
 def init_set_state(
@@ -258,370 +229,11 @@ def init_set_state(
     )
 
 
-class _GridMasks(NamedTuple):
-    """Per-row constants of the flattened grid (closed over by the scan)."""
-
-    lru_or_fifo: jax.Array  # (B, 1) bool
-    lfu: jax.Array  # (B, 1) bool
-    awrp_row: jax.Array  # (B,) bool
-    fifo_row: jax.Array  # (B,) bool
-    dead: jax.Array  # (B, W) bool — capacity-padding lanes
-    iota: jax.Array  # (1, W) int32 lane indices
-
-
-def _make_masks(pids: np.ndarray, ways_b: np.ndarray, W: int) -> _GridMasks:
-    pids = np.asarray(pids)
-    return _GridMasks(
-        lru_or_fifo=jnp.asarray(
-            (pids == POLICY_IDS["lru"]) | (pids == POLICY_IDS["fifo"])
-        )[:, None],
-        lfu=jnp.asarray(pids == POLICY_IDS["lfu"])[:, None],
-        awrp_row=jnp.asarray(pids == POLICY_IDS["awrp"]),
-        fifo_row=jnp.asarray(pids == POLICY_IDS["fifo"]),
-        dead=jnp.asarray(~(np.arange(W)[None, :] < np.asarray(ways_b)[:, None])),
-        iota=jnp.arange(W, dtype=jnp.int32)[None, :],
-    )
-
-
-def _row_step(
-    row_blocks: jax.Array,  # (B, W) int32
-    row_f: jax.Array,  # (B, W) int32
-    row_r: jax.Array,  # (B, W) int32
-    clk: jax.Array,  # (B,) int32 — this access's clock value per row
-    block: jax.Array,  # (B,) int32
-    masks: _GridMasks,
-    use_kernel: bool,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Shared per-access decision logic -> (slot, is_hit, new_f, new_r)."""
-    W = row_blocks.shape[-1]
-    iota = masks.iota
-
-    # hit detection: one vectorized min-reduce (W = miss sentinel)
-    match = row_blocks == block[:, None]
-    hit_k = jnp.min(jnp.where(match, iota, W), axis=-1)
-    is_hit = hit_k < W
-
-    # victim selection (also performs empty-lane fill; see notes above).
-    # stage 1: policy-selected primary key, min over lanes
-    if use_kernel:
-        from repro.kernels.ops import awrp_select_rows
-
-        v_awrp = awrp_select_rows(
-            row_f, row_r, clk, (~masks.dead).astype(jnp.int32)
-        )
-        prim = jnp.where(masks.lfu, row_f, row_r)  # awrp rows: unused filler
-    else:
-        w = row_f.astype(jnp.float32) / jnp.maximum(
-            clk[:, None] - row_r, 1
-        ).astype(jnp.float32)
-        wbits = jax.lax.bitcast_convert_type(w, jnp.int32)
-        prim = jnp.where(
-            masks.lru_or_fifo, row_r, jnp.where(masks.lfu, row_f, wbits)
-        )
-    prim = jnp.where(masks.dead, INT_MAX, prim)
-    m1 = jnp.min(prim, axis=-1)
-    # stage 2: tie-break key (recency for LFU, lane index otherwise)
-    sec = jnp.where(masks.lfu, row_r, iota)
-    k2 = jnp.where(prim == m1[:, None], sec, INT_MAX)
-    m2 = jnp.min(k2, axis=-1)
-    # stage 3: first lane achieving (m1, m2)
-    victim = jnp.min(jnp.where(k2 == m2[:, None], iota, W), axis=-1)
-    if use_kernel:
-        victim = jnp.where(masks.awrp_row, v_awrp, victim)
-
-    slot = jnp.where(is_hit, hit_k, victim)
-    old_f = jnp.take_along_axis(row_f, slot[:, None], -1)[:, 0]
-    old_r = jnp.take_along_axis(row_r, slot[:, None], -1)[:, 0]
-    new_f = jnp.where(is_hit, old_f + 1, 1).astype(jnp.int32)
-    # FIFO keeps its insertion clock in R: freeze R on hits for FIFO rows
-    new_r = jnp.where(is_hit & masks.fifo_row, old_r, clk).astype(jnp.int32)
-    return slot, is_hit, new_f, new_r
-
-
-# ---------------------------------------------------------------------------
-# Adaptive (ARC/CAR) array-encoded state
-# ---------------------------------------------------------------------------
-#
-# The pointer structures of ARC (four LRU lists + p) and CAR (two clocks with
-# reference bits + two LRU ghost lists + p) become five planes over L = 2*ways
-# lanes (ARC's |T1|+|T2|+|B1|+|B2| <= 2c invariant bounds occupancy; CAR's
-# directory obeys the same bound):
-#
-#   tag    — list membership: 0 free, 1 T1, 2 T2, 3 B1, 4 B2
-#   stamp  — within-list order from a per-(row, set) monotone counter; a
-#            list's LRU / clock hand is its min-stamp lane, its MRU / tail
-#            the max.  Every insertion, MRU-move, clock rotation and ghost
-#            append grants a fresh stamp, so stamps are unique per row-set
-#            and every list op is a masked min-reduction — no argmin, no
-#            data-dependent list surgery.
-#   ref    — CAR's reference bits (unused by ARC rows)
-#   p      — the adaptation target, float32 (same IEEE ops as the host
-#            oracles, whose p is maintained in float32 for exactly this
-#            reason: int(p) comparisons match bit-for-bit)
-#   ctr    — the stamp counter (bounded by ~(ways+2) grants per access; int32
-#            overflows after ~2**31/(ways+2) accesses — ~8.8M at 240 ways,
-#            far beyond any Table-1 trace)
-#
-# CAR's clock-hand sweep (`CAR._replace`'s while loop) promotes/rotates at
-# most |T1| + #ref-bits-set + 1 <= ways + 1 pages before evicting, so it runs
-# as a lax.while_loop with masked per-row no-ops, bounded by max_ways + 1.
-
-_FREE, _TAG_T1, _TAG_T2, _TAG_B1, _TAG_B2 = 0, 1, 2, 3, 4
-
-#: POLICY_IDS values of the flat-state policies (the `_row_step` partition)
-_SIMPLE_IDS = tuple(POLICY_IDS[p] for p in JAX_POLICIES)
-
-
-class AdaptiveState(NamedTuple):
-    """Array-encoded ARC/CAR state for a batch of policy instances; shapes
-    ``(B, num_sets, L)`` planes and ``(B, num_sets)`` scalars, L = 2*ways
-    (padded to the widest config in a mixed-capacity batch — the
-    first-free-lane insertion rule keeps occupancy inside each row's own
-    2*ways prefix, so no dead-lane mask is needed)."""
-
-    blocks: jax.Array  # (B, S, L) int32 block ids, -1 = free lane
-    tag: jax.Array  # (B, S, L) int32 list membership (_FREE.._TAG_B2)
-    stamp: jax.Array  # (B, S, L) int32 within-list order
-    ref: jax.Array  # (B, S, L) int32 CAR reference bits (0/1)
-    p: jax.Array  # (B, S) float32 ARC/CAR adaptation target
-    ctr: jax.Array  # (B, S) int32 stamp counter
-
-
-def init_adaptive_state(batch: int, num_sets: int, lanes: int) -> AdaptiveState:
-    return AdaptiveState(
-        blocks=jnp.full((batch, num_sets, lanes), -1, dtype=jnp.int32),
-        tag=jnp.zeros((batch, num_sets, lanes), dtype=jnp.int32),
-        stamp=jnp.zeros((batch, num_sets, lanes), dtype=jnp.int32),
-        ref=jnp.zeros((batch, num_sets, lanes), dtype=jnp.int32),
-        p=jnp.zeros((batch, num_sets), dtype=jnp.float32),
-        ctr=jnp.zeros((batch, num_sets), dtype=jnp.int32),
-    )
-
-
-#: (4, 1, 1) broadcast constant for the stacked per-list count below
-_TAG_STACK = np.arange(_TAG_T1, _TAG_B2 + 1, dtype=np.int32)[:, None, None]
-
-
-def _list_counts(tag: jax.Array):
-    """Per-list (T1, T2, B1, B2) sizes as one stacked ``(4, R)`` reduction."""
-    return jnp.sum(tag[None] == _TAG_STACK, axis=-1)
-
-
-def _keyed_head(tag: jax.Array, stamp: jax.Array, want: jax.Array) -> jax.Array:
-    """One-hot ``(R, L)`` mask of the min-stamp lane whose tag equals the
-    per-row target ``want`` (R,) — the selected list's LRU end / clock hand.
-    All-False for rows whose target list is empty (or ``want`` is the -1
-    no-op sentinel: no lane carries tag -1).  One keyed min-reduction covers
-    what would otherwise be a head computation per list: the step logic only
-    ever consumes ONE head per row, so the target list id is selected first
-    and the scan stays a single ``(R, L)`` pass — the per-step cost floor is
-    memory bandwidth over the planes, not the reduction count."""
-    in_list = tag == want[:, None]
-    m = jnp.min(jnp.where(in_list, stamp, INT_MAX), axis=-1, keepdims=True)
-    return in_list & (stamp == m)
-
-
-def _arc_step(
-    blocks: jax.Array,  # (R, L) int32
-    tag: jax.Array,  # (R, L) int32
-    stamp: jax.Array,  # (R, L) int32
-    p: jax.Array,  # (R,) float32
-    ctr: jax.Array,  # (R,) int32
-    cap: jax.Array,  # (R,) int32 per-row capacity c
-    x: jax.Array,  # (R,) int32 accessed block
-    iota: jax.Array,  # (1, L) int32
-    lanes: int,
-) -> Tuple[jax.Array, ...]:
-    """One ARC access, vectorized over rows; mirrors ``policies.ARC.access``
-    decision-for-decision (float32 p, int truncation, LRU-by-min-stamp)."""
-    xcol = x[:, None]
-    present = (blocks == xcol) & (tag != _FREE)
-    tag_x = jnp.max(jnp.where(present, tag, 0), axis=-1)  # 0 when absent
-    counts = _list_counts(tag)
-    n1, n2, n3, n4 = counts[0], counts[1], counts[2], counts[3]
-    hit = (tag_x == _TAG_T1) | (tag_x == _TAG_T2)
-    in_b1 = tag_x == _TAG_B1
-    in_b2 = tag_x == _TAG_B2
-    miss_new = tag_x == 0
-
-    # ghost-hit adaptation (host updates p BEFORE _replace; B1/B2 still
-    # contain x here) — float32, op order identical to the host oracle
-    one = jnp.float32(1.0)
-    capf = cap.astype(jnp.float32)
-    n3f, n4f = n3.astype(jnp.float32), n4.astype(jnp.float32)
-    p_inc = jnp.minimum(capf, p + jnp.maximum(n4f / jnp.maximum(n3f, one), one))
-    p_dec = jnp.maximum(
-        jnp.float32(0.0), p - jnp.maximum(n3f / jnp.maximum(n4f, one), one)
-    )
-    p_new = jnp.where(in_b1, p_inc, jnp.where(in_b2, p_dec, p))
-
-    # complete-miss directory maintenance + REPLACE trigger
-    l1 = n1 + n3
-    total = n1 + n2 + n3 + n4
-    cm1a = miss_new & (l1 == cap) & (n1 < cap)  # pop B1 LRU, then replace
-    cm1b = miss_new & (l1 == cap) & (n1 == cap)  # discard T1 LRU outright
-    cm2 = miss_new & (l1 != cap)
-    do_repl = in_b1 | in_b2 | cm1a | (cm2 & (total >= cap))
-    pop_b2 = cm2 & (total == 2 * cap)
-
-    # the three pop targets are mutually exclusive per row, so one keyed
-    # head reduction covers them (-1 = no pop this access)
-    pop_want = jnp.where(
-        cm1a, _TAG_B1, jnp.where(pop_b2, _TAG_B2, jnp.where(cm1b, _TAG_T1, -1))
-    )
-    pop = _keyed_head(tag, stamp, pop_want)
-    new_tag = jnp.where(pop, _FREE, tag)
-    new_blocks = jnp.where(pop, -1, blocks)
-
-    # REPLACE: demote T1's LRU to B1 iff T1 nonempty and (|T1| > int(p), or
-    # x in B2 with |T1| == int(p)); else demote T2's LRU to B2.  The demoted
-    # page is restamped — ghost lists append at their MRU end.  (Computed on
-    # the pre-pop planes: pops touch B1/B2/T1-discard lanes, never a
-    # replace's T1/T2 head — T1-discard rows don't replace.)
-    ip = p_new.astype(jnp.int32)
-    cond_t1 = (n1 >= 1) & ((in_b2 & (n1 == ip)) | (n1 > ip))
-    dem_t1 = do_repl & cond_t1
-    dem_t2 = do_repl & ~cond_t1 & (n2 >= 1)
-    dem_want = jnp.where(dem_t1, _TAG_T1, jnp.where(dem_t2, _TAG_T2, -1))
-    dem = _keyed_head(tag, stamp, dem_want)
-    stamp_dem = (ctr + 1)[:, None]
-    stamp_x = (ctr + 2)[:, None]
-    new_tag = jnp.where(dem, jnp.where(dem_t1, _TAG_B1, _TAG_B2)[:, None], new_tag)
-    new_stamp = jnp.where(dem, stamp_dem, stamp)
-
-    # x's own transition: T1-hit and ghost hits land at T2's MRU; a T2 hit
-    # restamps in place (move_to_end)
-    to_t2 = (tag_x == _TAG_T1) | in_b1 | in_b2
-    new_tag = jnp.where(present & to_t2[:, None], _TAG_T2, new_tag)
-    new_stamp = jnp.where(
-        present & (hit | in_b1 | in_b2)[:, None], stamp_x, new_stamp
-    )
-
-    # complete miss: insert at T1's MRU in the first free lane (post-pop)
-    free = new_tag == _FREE
-    ins = jnp.min(jnp.where(free, iota, lanes), axis=-1)
-    ins_oh = (iota == ins[:, None]) & miss_new[:, None]
-    new_tag = jnp.where(ins_oh, _TAG_T1, new_tag)
-    new_blocks = jnp.where(ins_oh, xcol, new_blocks)
-    new_stamp = jnp.where(ins_oh, stamp_x, new_stamp)
-    return new_blocks, new_tag, new_stamp, p_new, ctr + 2, hit
-
-
-def _car_step(
-    blocks: jax.Array,  # (R, L) int32
-    tag: jax.Array,
-    stamp: jax.Array,
-    ref: jax.Array,
-    p: jax.Array,  # (R,) float32
-    ctr: jax.Array,  # (R,) int32
-    cap: jax.Array,  # (R,) int32
-    x: jax.Array,  # (R,) int32
-    iota: jax.Array,  # (1, L)
-    lanes: int,
-    max_iters: int,  # static bound on the clock-hand sweep: max_ways + 1
-) -> Tuple[jax.Array, ...]:
-    """One CAR access, vectorized over rows; mirrors ``policies.CAR.access``.
-    The clock-hand sweep runs as a masked ``lax.while_loop`` — each iteration
-    either promotes T1's head to T2's tail, rotates T2's head (clearing its
-    reference bit), or evicts to a ghost list and retires the row."""
-    xcol = x[:, None]
-    present = (blocks == xcol) & (tag != _FREE)
-    tag_x = jnp.max(jnp.where(present, tag, 0), axis=-1)
-    hit = (tag_x == _TAG_T1) | (tag_x == _TAG_T2)
-    in_b1 = tag_x == _TAG_B1
-    in_b2 = tag_x == _TAG_B2
-    miss_new = tag_x == 0
-    resident = jnp.sum((tag == _TAG_T1) | (tag == _TAG_T2), axis=-1)
-    full = resident == cap
-
-    # cache hit: set the reference bit; nothing else moves
-    ref = jnp.where(present & hit[:, None], 1, ref)
-
-    # REPLACE (only when the cache is full): bounded clock-hand sweep
-    need = ~hit & full
-    ip = jnp.maximum(1, p.astype(jnp.int32))  # host: max(1, int(p))
-
-    def sweep_cond(carry):
-        i, _, _, _, _, live = carry
-        return (i < max_iters) & jnp.any(live)
-
-    def sweep_body(carry):
-        i, tag_c, stamp_c, ref_c, ctr_c, live = carry
-        n1c = jnp.sum(tag_c == _TAG_T1, axis=-1)
-        use_t1 = n1c >= ip  # T1 hand while |T1| >= max(1, int(p))
-        want = jnp.where(live, jnp.where(use_t1, _TAG_T1, _TAG_T2), -1)
-        head = _keyed_head(tag_c, stamp_c, want)
-        head_ref = jnp.max(jnp.where(head, ref_c, 0), axis=-1)
-        evict = live & (head_ref == 0)
-        snew = (ctr_c + 1)[:, None]
-        # ref==0 head: evict to the matching ghost list (restamp = MRU
-        # append); ref==1 T1 head: promote to T2 tail; ref==1 T2 head:
-        # rotate to tail.  All three clear the ref bit and restamp.
-        tag_c = jnp.where(
-            head & (evict & use_t1)[:, None],
-            _TAG_B1,
-            jnp.where(
-                head & (evict & ~use_t1)[:, None],
-                _TAG_B2,
-                jnp.where(head & (~evict & use_t1)[:, None], _TAG_T2, tag_c),
-            ),
-        )
-        ref_c = jnp.where(head, 0, ref_c)
-        stamp_c = jnp.where(head, snew, stamp_c)
-        ctr_c = jnp.where(live, ctr_c + 1, ctr_c)
-        return (i + 1, tag_c, stamp_c, ref_c, ctr_c, live & ~evict)
-
-    _, tag, stamp, ref, ctr, _ = jax.lax.while_loop(
-        sweep_cond, sweep_body, (jnp.int32(0), tag, stamp, ref, ctr, need)
-    )
-
-    # post-replace list lengths (x still resident in its ghost list)
-    counts_p = _list_counts(tag)
-    n1p, n2p, n3p, n4p = counts_p[0], counts_p[1], counts_p[2], counts_p[3]
-
-    # complete-miss directory discards (host order: only when full, after
-    # the sweep, before the insert; the two pops are mutually exclusive)
-    dir_guard = miss_new & full
-    popb1 = dir_guard & (n1p + n3p == cap + 1)
-    popb2 = dir_guard & (n1p + n3p != cap + 1) & (n1p + n2p + n3p + n4p >= 2 * cap)
-    pop = _keyed_head(
-        tag, stamp, jnp.where(popb1, _TAG_B1, jnp.where(popb2, _TAG_B2, -1))
-    )
-    tag = jnp.where(pop, _FREE, tag)
-    blocks = jnp.where(pop, -1, blocks)
-
-    # ghost-hit adaptation (host updates p AFTER _replace, from post-sweep
-    # lengths) — float32, op order identical to the host oracle
-    one = jnp.float32(1.0)
-    capf = cap.astype(jnp.float32)
-    n3f, n4f = n3p.astype(jnp.float32), n4p.astype(jnp.float32)
-    p_inc = jnp.minimum(capf, p + jnp.maximum(one, n4f / jnp.maximum(n3f, one)))
-    p_dec = jnp.maximum(
-        jnp.float32(0.0), p - jnp.maximum(one, n3f / jnp.maximum(n4f, one))
-    )
-    p = jnp.where(in_b1, p_inc, jnp.where(in_b2, p_dec, p))
-
-    stamp_x = (ctr + 1)[:, None]
-    # ghost hit: re-enter at T2's tail with ref bit 0
-    ghost = in_b1 | in_b2
-    tag = jnp.where(present & ghost[:, None], _TAG_T2, tag)
-    stamp = jnp.where(present & ghost[:, None], stamp_x, stamp)
-    ref = jnp.where(present & ghost[:, None], 0, ref)
-    # complete miss: insert at T1's tail in the first free lane
-    free = tag == _FREE
-    ins = jnp.min(jnp.where(free, iota, lanes), axis=-1)
-    ins_oh = (iota == ins[:, None]) & miss_new[:, None]
-    tag = jnp.where(ins_oh, _TAG_T1, tag)
-    blocks = jnp.where(ins_oh, xcol, blocks)
-    stamp = jnp.where(ins_oh, stamp_x, stamp)
-    ref = jnp.where(ins_oh, 0, ref)
-    ctr = jnp.where(hit, ctr, ctr + 1)
-    return blocks, tag, stamp, ref, p, ctr, hit
-
-
 @functools.partial(
     jax.jit,
-    static_argnames=("policy_ids", "ways", "num_sets", "use_kernel", "unroll"),
+    static_argnames=(
+        "policy_ids", "ways", "num_sets", "use_kernel", "unroll", "renorm_at",
+    ),
 )
 def _simulate_batched_impl(
     traces: jax.Array,  # (N, T) int32
@@ -630,11 +242,11 @@ def _simulate_batched_impl(
     num_sets: int,
     use_kernel: bool,
     unroll: int,
+    renorm_at: Optional[int],
 ) -> jax.Array:
     N, T = traces.shape
     P, C = len(policy_ids), len(ways)
     PC = P * C
-    B = N * PC
     maxW = max(ways)
     W = maxW
     if use_kernel:
@@ -642,134 +254,77 @@ def _simulate_batched_impl(
 
     # grid flattening: b = (n*P + p)*C + c  (capacity axis fastest).  Rows
     # partition statically by state layout: flat-state (awrp/lru/fifo/lfu)
-    # rows share the (blocks, F, R) planes and `_row_step`; arc and car rows
-    # each get AdaptiveState planes.  Hits re-interleave with a static gather.
+    # rows share one FlatCore; arc and car rows each get an AdaptiveCore.
+    # Hits re-interleave with a static gather.
     pids = np.tile(np.repeat(np.asarray(policy_ids, np.int32), C), N)
     ways_b = np.tile(np.asarray(ways, np.int32), N * P)
-    simple_idx = np.flatnonzero(np.isin(pids, np.asarray(_SIMPLE_IDS)))
+    simple_idx = np.flatnonzero(
+        np.isin(pids, [POLICY_IDS[p] for p in JAX_POLICIES])
+    )
     arc_idx = np.flatnonzero(pids == POLICY_IDS["arc"])
     car_idx = np.flatnonzero(pids == POLICY_IDS["car"])
     inv = jnp.asarray(np.argsort(np.concatenate([simple_idx, arc_idx, car_idx])))
     Bs, Ba, Bc = len(simple_idx), len(arc_idx), len(car_idx)
-
-    masks = (
-        _make_masks(pids[simple_idx], ways_b[simple_idx], W) if Bs else None
-    )
-    sbidx = jnp.arange(Bs)
     take_s, take_a, take_c = map(jnp.asarray, (simple_idx, arc_idx, car_idx))
 
     L = 2 * maxW  # adaptive directory lanes (cache + ghosts)
-    iota_l = jnp.arange(L, dtype=jnp.int32)[None, :]
-    arc_cap = jnp.asarray(ways_b[arc_idx])  # (Ba,) per-set capacities
-    car_cap = jnp.asarray(ways_b[car_idx])
-
-    def adaptive_substep(st: AdaptiveState, x, cap, kind: str):
-        if num_sets == 1:
-            # single-set fast path: cheap squeeze/expand instead of the
-            # gather/scatter (the scan body is dispatch-bound on CPU)
-            get = lambda a: a[:, 0]  # noqa: E731
-            put = lambda a, new: new[:, None]  # noqa: E731
-        else:
-            rows = jnp.arange(x.shape[0])
-            sid = x % num_sets
-            get = lambda a: a[rows, sid]  # noqa: E731
-            put = lambda a, new: a.at[rows, sid].set(new)  # noqa: E731
-        blocks, tag, stamp = get(st.blocks), get(st.tag), get(st.stamp)
-        p, ctr = get(st.p), get(st.ctr)
-        if kind == "arc":
-            blocks, tag, stamp, p, ctr, hit = _arc_step(
-                blocks, tag, stamp, p, ctr, cap, x, iota_l, L
-            )
-            ref = st.ref
-        else:
-            blocks, tag, stamp, new_ref, p, ctr, hit = _car_step(
-                blocks, tag, stamp, get(st.ref), p, ctr, cap, x,
-                iota_l, L, maxW + 1,
-            )
-            ref = put(st.ref, new_ref)
-        return (
-            AdaptiveState(
-                blocks=put(st.blocks, blocks),
-                tag=put(st.tag, tag),
-                stamp=put(st.stamp, stamp),
-                ref=ref,
-                p=put(st.p, p),
-                ctr=put(st.ctr, ctr),
-            ),
-            hit,
+    flat_core = (
+        FlatCore(
+            pids=tuple(int(p) for p in pids[simple_idx]),
+            ways=tuple(int(w) for w in ways_b[simple_idx]),
+            num_sets=num_sets,
+            lanes=W,
+            use_kernel=use_kernel,
         )
+        if Bs
+        else None
+    )
+    arc_core = (
+        AdaptiveCore(
+            kind="arc",
+            caps=tuple(int(w) for w in ways_b[arc_idx]),
+            num_sets=num_sets,
+            lanes=L,
+            renorm_at=renorm_at,
+        )
+        if Ba
+        else None
+    )
+    car_core = (
+        AdaptiveCore(
+            kind="car",
+            caps=tuple(int(w) for w in ways_b[car_idx]),
+            num_sets=num_sets,
+            lanes=L,
+            renorm_at=renorm_at,
+        )
+        if Bc
+        else None
+    )
 
-    xs = traces.T.astype(jnp.int32)  # (T, N)
-    # single-set fast path: flat-state clock derives from the step index
-    # (every access hits the one set); adaptive rows are clock-free either way
-    clks = jnp.arange(1, T + 1, dtype=jnp.int32)
-
-    def step(carry, xs_t):
-        simple_carry, arc_st, car_st = carry
-        block_n, clk_s = xs_t
+    def step(carry, block_n):
+        flat_st, arc_st, car_st = carry
         block = jnp.repeat(block_n, PC)
         outs = []
-        if Bs:
-            bs = block[take_s]
-            if num_sets == 1:
-                blocks, f, r = simple_carry
-                clk = jnp.broadcast_to(clk_s, (Bs,))
-                slot, is_hit, new_f, new_r = _row_step(
-                    blocks, f, r, clk, bs, masks, use_kernel
-                )
-                simple_carry = (
-                    blocks.at[sbidx, slot].set(bs),
-                    f.at[sbidx, slot].set(new_f),
-                    r.at[sbidx, slot].set(new_r),
-                )
-            else:
-                state = simple_carry
-                sid = bs % num_sets
-                clk = state.clock[sbidx, sid] + 1
-                slot, is_hit, new_f, new_r = _row_step(
-                    state.blocks[sbidx, sid],
-                    state.f[sbidx, sid],
-                    state.r[sbidx, sid],
-                    clk,
-                    bs,
-                    masks,
-                    use_kernel,
-                )
-                simple_carry = SetCacheState(
-                    blocks=state.blocks.at[sbidx, sid, slot].set(bs),
-                    f=state.f.at[sbidx, sid, slot].set(new_f),
-                    r=state.r.at[sbidx, sid, slot].set(new_r),
-                    clock=state.clock.at[sbidx, sid].set(clk),
-                )
-            outs.append(is_hit)
-        if Ba:
-            arc_st, hit_a = adaptive_substep(arc_st, block[take_a], arc_cap, "arc")
-            outs.append(hit_a)
-        if Bc:
-            car_st, hit_c = adaptive_substep(car_st, block[take_c], car_cap, "car")
-            outs.append(hit_c)
+        if flat_core is not None:
+            flat_st, h = flat_core.on_access(flat_st, block[take_s])
+            outs.append(h)
+        if arc_core is not None:
+            arc_st, h = arc_core.on_access(arc_st, block[take_a])
+            outs.append(h)
+        if car_core is not None:
+            car_st, h = car_core.on_access(car_st, block[take_c])
+            outs.append(h)
         hits = outs[0] if len(outs) == 1 else jnp.concatenate(outs)
-        return (simple_carry, arc_st, car_st), hits
+        return (flat_st, arc_st, car_st), hits
 
-    if not Bs:
-        simple0 = ()
-    elif num_sets == 1:
-        simple0 = (
-            jnp.full((Bs, W), -1, dtype=jnp.int32),
-            jnp.zeros((Bs, W), dtype=jnp.int32),
-            jnp.zeros((Bs, W), dtype=jnp.int32),
-        )
-    else:
-        simple0 = SetCacheState(
-            blocks=jnp.full((Bs, num_sets, W), -1, dtype=jnp.int32),
-            f=jnp.zeros((Bs, num_sets, W), dtype=jnp.int32),
-            r=jnp.zeros((Bs, num_sets, W), dtype=jnp.int32),
-            clock=jnp.zeros((Bs, num_sets), dtype=jnp.int32),
-        )
-    arc0 = init_adaptive_state(Ba, num_sets, L) if Ba else ()
-    car0 = init_adaptive_state(Bc, num_sets, L) if Bc else ()
-
-    _, hits = jax.lax.scan(step, (simple0, arc0, car0), (xs, clks), unroll=unroll)
+    carry0 = (
+        flat_core.init() if flat_core is not None else (),
+        arc_core.init() if arc_core is not None else (),
+        car_core.init() if car_core is not None else (),
+    )
+    xs = traces.T.astype(jnp.int32)  # (T, N)
+    _, hits = jax.lax.scan(step, carry0, xs, unroll=unroll)
 
     # (T, concat-of-groups) -> original row order -> (N, P, C, T)
     return jnp.moveaxis(hits[:, inv], 0, -1).reshape(N, P, C, T)
@@ -783,6 +338,7 @@ def simulate_trace_batched(
     num_sets: int = 1,
     use_kernel: bool | None = None,
     unroll: int = 1,
+    _renorm_at: Optional[int] = None,
 ) -> jax.Array:
     """Run the full (trace, policy, capacity) grid as ONE jitted program.
 
@@ -803,10 +359,17 @@ def simulate_trace_batched(
         per-step overhead the inline bit-pattern min-reduction avoids.
         Decisions are identical either way (property-tested).
       unroll: ``lax.scan`` unroll factor.
+      _renorm_at: test hook — override the adaptive stamp-renormalization
+        threshold (forcing frequent renormalizations); None picks it
+        automatically (and elides the check entirely for traces short
+        enough that the stamp counter cannot approach int32 range).
 
     Returns:
       bool array ``(n_traces, n_policies, n_capacities, T)`` of per-access
-      hits, bit-identical to the host oracles' decisions.
+      hits, bit-identical to the host oracles' decisions.  Trace length is
+      unbounded: adaptive rows renormalize their stamp planes in place
+      before the stamp counter could overflow (decision-preserving; see
+      ``policy_core._renorm_stamps``).
     """
     tr = np.asarray(traces)
     if tr.ndim == 1:
@@ -830,16 +393,14 @@ def simulate_trace_batched(
         if c % num_sets:
             raise ValueError(f"capacity {c} not divisible by num_sets {num_sets}")
         ways.append(c // num_sets)
-    if any(p in ADAPTIVE_POLICIES for p in policies):
-        # ARC/CAR grant at most ways+2 stamps per access; fail loudly before
-        # the int32 stamp counter could wrap and silently invert list order
-        grants = tr.shape[1] * (max(ways) + 2)
-        if grants >= INT_MAX:
-            raise ValueError(
-                f"trace too long for the adaptive stamp counter: {tr.shape[1]}"
-                f" accesses x up to {max(ways) + 2} stamp grants each would "
-                "overflow int32; shard the trace or reduce ways"
-            )
+    renorm_at = _renorm_at
+    if renorm_at is None and any(p in ADAPTIVE_POLICIES for p in policies):
+        # ARC/CAR grant at most ways+2 stamps per access; when the whole
+        # trace cannot approach the renormalization ceiling, elide the
+        # per-step check statically (it costs nothing on Table-1 traces)
+        auto = AdaptiveCore(kind="arc", caps=(max(ways),)).renorm_at
+        if tr.shape[1] * (max(ways) + 2) >= auto:
+            renorm_at = auto
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     return _simulate_batched_impl(
@@ -849,6 +410,7 @@ def simulate_trace_batched(
         int(num_sets),
         bool(use_kernel),
         int(unroll),
+        renorm_at,
     )
 
 
@@ -872,28 +434,34 @@ def access_sets(
     """One access against a single ``(num_sets, ways)`` state (incremental
     API, e.g. a serving-side set-associative pool).  All lanes are live; for
     mixed-capacity batches use ``simulate_trace_batched``.  Flat-state
-    policies only — ARC/CAR carry ``AdaptiveState`` and run through
-    ``simulate_trace`` / ``simulate_trace_sets`` / the batched engine."""
+    policies only — ARC/CAR carry ``AdaptiveState`` and run through the
+    policy core (``policy_core.make_core``) or the batched engine."""
     if policy not in JAX_POLICIES:
         raise ValueError(
             f"access_sets supports the flat-state policies {JAX_POLICIES}; "
-            f"adaptive policies {ADAPTIVE_POLICIES} run via the batched engine"
+            f"adaptive policies {ADAPTIVE_POLICIES} run via the policy core"
         )
     num_sets, W = state.blocks.shape
-    masks = _make_masks(
-        np.asarray([POLICY_IDS[policy]]), np.asarray([W]), W
+    core = FlatCore(
+        pids=(POLICY_IDS[policy],), ways=(W,), num_sets=num_sets,
+        lanes=W, use_kernel=use_kernel,
     )
-    block = jnp.asarray(block, dtype=jnp.int32)[None]
-    sid = block % num_sets
-    clk = state.clock[sid] + 1
-    slot, is_hit, new_f, new_r = _row_step(
-        state.blocks[sid], state.f[sid], state.r[sid], clk, block, masks,
-        use_kernel,
-    )
-    state = SetCacheState(
-        blocks=state.blocks.at[sid, slot].set(block),
-        f=state.f.at[sid, slot].set(new_f),
-        r=state.r.at[sid, slot].set(new_r),
-        clock=state.clock.at[sid].set(clk),
-    )
+    if num_sets == 1:
+        # the (S=1, W) planes already ARE the core's squeezed (rows=1, W)
+        state, is_hit = core.on_access(
+            state, jnp.asarray(block, jnp.int32)[None]
+        )
+    else:
+        # adapt the single-cache (S, W) layout to the core's (rows=1, S, W)
+        fstate = FlatState(
+            blocks=state.blocks[None], f=state.f[None], r=state.r[None],
+            clock=state.clock[None],
+        )
+        fstate, is_hit = core.on_access(
+            fstate, jnp.asarray(block, jnp.int32)[None]
+        )
+        state = SetCacheState(
+            blocks=fstate.blocks[0], f=fstate.f[0], r=fstate.r[0],
+            clock=fstate.clock[0],
+        )
     return state, is_hit[0]

@@ -1,24 +1,28 @@
 """Policy-pluggable victim selection for KV pages (the paper's technique and
 its baselines, applied to the serving cache).
 
-``page_victim`` is the single decision point used by the paged pool: AWRP is
-the paper's eq. (1); LRU/FIFO/LFU are the baselines the paper compares
-against, re-expressed on page metadata so the serving ablation
+``page_victim`` is the single decision point used by the classic paged pool:
+AWRP is the paper's eq. (1); LRU/FIFO/LFU are the baselines the paper
+compares against, re-expressed on page metadata so the serving ablation
 (benchmarks/serve_policy_bench.py) is apples-to-apples.  ``arc`` and ``car``
 are stateless two-segment approximations of the adaptive policies on the
 same metadata (DESIGN.md §2): pages referenced at most once since insertion
 form the T1-analog (evicted first), multiply-referenced pages the T2-analog;
 ``arc`` orders within a segment by recency, ``car`` by insertion (clock)
-order.  The full adaptive ARC/CAR — ghost lists and the self-tuning ``p`` —
-need directory state the pool doesn't carry and run in the batched sweep
-engine (``repro.core.jax_policies``).
+order.  The TRUE adaptive ARC/CAR — ghost directory and the self-tuning
+``p`` — carry ``AdaptiveState`` planes through the unified policy core
+(``repro.core.policy_core``, DESIGN.md §7) and run live in the pool via
+``repro.cache.paged_kv``'s adaptive mode as well as in the batched sweep
+engine.
 
-Every branch is a chain of vectorizable min-reductions — no ``argmin``,
+The victim *reductions* live in the policy core: every branch is a chain of
+vectorizable min-reductions (``policy_core.first_min``) — no ``argmin``,
 which XLA CPU lowers to a ~30x slower scalar reduce (decision-identical to
-the argmin formulation; parity-tested in tests/test_paged_pool.py).  On TPU
-the AWRP path can also route through the fused Pallas kernel
-(``repro.kernels.ops.awrp_select``); the jnp fallback used inside the
-GSPMD-partitioned decode step is decision-identical (property-tested).
+the argmin formulation; parity-tested in tests/test_paged_pool.py).  The
+AWRP branch is a core-level dispatch (``policy_core.awrp_victim_rows``):
+pass ``use_kernel=True`` to route through the fused Pallas kernel on TPU;
+the inline jnp path used inside the GSPMD-partitioned decode step is
+decision-identical (property-tested).
 """
 
 from __future__ import annotations
@@ -26,20 +30,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_policies import awrp_weights
+from repro.core.policy_core import INT_MAX, awrp_victim_rows, first_min
 
-INT_MAX = 2**31 - 1
+__all__ = ["PAGE_POLICIES", "first_min", "page_victim"]
 
 PAGE_POLICIES = ("awrp", "lru", "fifo", "lfu", "arc", "car")
-
-
-def first_min(key: jax.Array) -> jax.Array:
-    """First index achieving the row minimum of ``key`` (..., P) int32 —
-    ``argmin`` semantics as two vectorizable min-reductions."""
-    P = key.shape[-1]
-    lane = jax.lax.broadcasted_iota(jnp.int32, key.shape, key.ndim - 1)
-    m = jnp.min(key, axis=-1, keepdims=True)
-    return jnp.min(jnp.where(key == m, lane, P), axis=-1).astype(jnp.int32)
 
 
 def _masked_tiebreak(primary: jax.Array, secondary: jax.Array) -> jax.Array:
@@ -55,13 +50,12 @@ def page_victim(
     page_start: jax.Array,  # (B, P) int32 token start, -1 free
     clock: jax.Array,  # (B,) int32
     pinned: jax.Array,  # (B, P) bool
+    *,
+    use_kernel: bool = False,
 ) -> jax.Array:
     valid = (page_start >= 0) & ~pinned
     if policy == "awrp":
-        w = awrp_weights(f, r, clock[:, None])
-        # w >= 0 and finite, so its int32 bit pattern orders identically
-        bits = jax.lax.bitcast_convert_type(w, jnp.int32)
-        return first_min(jnp.where(valid, bits, INT_MAX))
+        return awrp_victim_rows(f, r, clock, valid, use_kernel=use_kernel)
     if policy == "lru":
         return first_min(jnp.where(valid, r, INT_MAX))
     if policy == "fifo":

@@ -287,7 +287,7 @@ class RANDOM(ReplacementPolicy):
 
 class ARC(ReplacementPolicy):
     """Adaptation parameter ``p`` is maintained in float32 with the exact op
-    order of the device engine (``jax_policies._arc_step``) so the
+    order of the device engine (``policy_core._arc_step``) so the
     ``int(p)`` comparisons — and therefore every decision — match the
     batched device implementation bit-for-bit (property-tested)."""
 
@@ -394,7 +394,7 @@ class _Clock:
 
 class CAR(ReplacementPolicy):
     """``p`` kept in float32 with the device engine's exact op order
-    (``jax_policies._car_step``) — see the ARC docstring."""
+    (``policy_core._car_step``) — see the ARC docstring."""
 
     name = "car"
 

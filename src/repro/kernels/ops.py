@@ -2,7 +2,12 @@
 
 Handles TPU-friendly padding (lane-aligned page counts, MXU-aligned seq
 tiles) and the interpret-mode fallback used on CPU (this container) — on a
-real TPU set ``interpret=False`` (the default resolves via backend check)."""
+real TPU set ``interpret=False`` (the default resolves via backend check).
+
+Policy callers never import these directly: victim selection routes through
+the unified core's dispatch (``repro.core.policy_core.awrp_victim_rows``,
+DESIGN.md §7), which picks the kernel or the decision-identical inline
+bit-pattern min-reduction per backend."""
 
 from __future__ import annotations
 

@@ -430,6 +430,11 @@ def _decode_cache_decl(cfg, kind: str, batch: int, max_len: int, kv_mode: str,
         return {"k": make((batch, W, kvd), dtype), "v": make((batch, W, kvd), dtype)}
     # full-attention kinds
     if kv_mode == "paged":
+        if cfg.kv_policy in paged_kv.TRUE_ADAPTIVE_KV:
+            fn = (paged_kv.abstract_adaptive_pool if abstract
+                  else paged_kv.init_adaptive_pool)
+            return fn(batch, cfg.bounded_kv_pages, cfg.page_size, kvd, dtype,
+                      cfg.kv_policy)
         fn = paged_kv.abstract_pool if abstract else paged_kv.init_pool
         return fn(batch, cfg.bounded_kv_pages, cfg.page_size, kvd, dtype)
     return {"k": make((batch, max_len, kvd), dtype),
@@ -490,16 +495,26 @@ def _decode_block(kind: str, p: Params, x: jax.Array, cfg, cache, pos,
                                       v_cache=v, kv_positions=kv_pos)
         new_cache = {"k": k, "v": v}
     elif kv_mode == "paged":
-        pool = paged_kv.insert_token(cache, nk[:, 0], nv[:, 0], pos,
-                                     cfg.page_size, policy=cfg.kv_policy)
+        adaptive = cfg.kv_policy in paged_kv.TRUE_ADAPTIVE_KV
+        if adaptive:
+            core = paged_kv.adaptive_core(cfg.kv_policy, B,
+                                          cfg.bounded_kv_pages)
+            apool = paged_kv.adaptive_insert_token(
+                cache, nk[:, 0], nv[:, 0], pos, cfg.page_size, core)
+            pool = apool.pool
+        else:
+            pool = paged_kv.insert_token(cache, nk[:, 0], nv[:, 0], pos,
+                                         cfg.page_size, policy=cfg.kv_policy)
         Ppool, page = pool.f.shape[1], cfg.page_size
         kflat = pool.k.reshape(B, Ppool * page, -1)
         vflat = pool.v.reshape(B, Ppool * page, -1)
         kv_pos = paged_kv.kv_positions(pool, pos, page)
         attn_out, mass = L.decode_attend(p, h, cfg, position=pos, k_cache=kflat,
                                          v_cache=vflat, kv_positions=kv_pos)
-        pool = paged_kv.score_update(pool, mass, page)
-        new_cache = pool
+        if adaptive:
+            new_cache = paged_kv.adaptive_score_update(apool, mass, page, core)
+        else:
+            new_cache = paged_kv.score_update(pool, mass, page)
     else:  # full
         k, v = paged_kv.full_cache_insert(cache["k"], cache["v"], nk, nv, pos)
         T = k.shape[1]
@@ -676,7 +691,7 @@ def pool_from_prefill(cfg, k, v, S: int, stacked: bool):
         f = jnp.where(order < n_res, 1, 0).astype(jnp.int32)
         r = jnp.where(order < n_res, order + 1, 0).astype(jnp.int32)
         starts = jnp.where(order < n_res, start_tok + order * page, -1).astype(jnp.int32)
-        return paged_kv.PagedPool(
+        pool = paged_kv.PagedPool(
             k=kp, v=vp,
             f=jnp.broadcast_to(f, (B, P)),
             r=jnp.broadcast_to(r, (B, P)),
@@ -684,6 +699,13 @@ def pool_from_prefill(cfg, k, v, S: int, stacked: bool):
             clock=jnp.full((B,), n_res, jnp.int32),
             open_slot=jnp.full((B,), max(n_res - 1, 0), jnp.int32),
         )
+        if cfg.kv_policy in paged_kv.TRUE_ADAPTIVE_KV:
+            return paged_kv.AdaptivePagedPool(
+                pool=pool,
+                policy=paged_kv.seed_adaptive_state(
+                    B, P, start_tok // page, n_res),
+            )
+        return pool
 
     if stacked:
         return jax.vmap(one)(k, v)

@@ -10,8 +10,12 @@ configs; the same jitted functions are what the dry-run lowers for the
   * prompt cache: exact-match prefix reuse through ``cache.PrefixCache``
     (AWRP eviction) — a hit skips prefill entirely;
   * bounded-KV mode: ``kv_mode="paged"`` serves long contexts in a fixed
-    page pool with the paper's eviction rule (``cfg.kv_policy``);
-  * per-step telemetry (tokens/s host-side, cache hit ratios).
+    page pool with the paper's eviction rule (``cfg.kv_policy`` — including
+    the true-adaptive ``arc_adaptive``/``car_adaptive`` pool mode);
+  * per-policy telemetry from one code path: every cache the engine holds
+    (prompt cache, optional MoE expert cache) is built through the unified
+    policy factory (``policy_core.make_cache_policy`` / ``make_core``) and
+    reports a uniform ``telemetry()`` dict — see ``ServeEngine.telemetry``.
 """
 
 from __future__ import annotations
@@ -48,12 +52,16 @@ class Result:
 class ServeEngine:
     def __init__(self, cfg, params, *, max_len: int = 512,
                  kv_mode: str = "full", prefix_cache_entries: int = 8,
-                 prefix_policy: str = "awrp", seed: int = 0):
+                 prefix_policy: str = "awrp", expert_cache=None, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.kv_mode = kv_mode
+        # prefix_policy may be a name or a prebuilt policy instance — both
+        # resolve through the unified factory inside PrefixCache
         self.prefix_cache = PrefixCache(prefix_cache_entries, prefix_policy)
+        #: optional ExpertCacheRuntime the model's MoE router reports into
+        self.expert_cache = expert_cache
         self.key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, max_len=max_len, kv_mode=kv_mode)
@@ -91,6 +99,24 @@ class ServeEngine:
         return logits, caches
 
     # -- public -------------------------------------------------------------
+    def telemetry(self) -> Dict[str, dict]:
+        """Per-policy hit ratios for every cache the engine serves from,
+        reported through one code path: each cache exposes the same
+        ``telemetry()`` dict (policy name, accesses, hit_ratio), so adding a
+        cache layer never adds a bespoke stats format.  The bounded-KV
+        policy is included by name (its hits are device-side attention
+        references, surfaced by benchmarks/serve_policy_bench.py)."""
+        out: Dict[str, dict] = {
+            "prefix_cache": self.prefix_cache.telemetry(),
+            "engine": dict(self.stats),
+        }
+        if self.kv_mode == "paged":
+            out["kv_pool"] = {"policy": self.cfg.kv_policy,
+                              "pages": self.cfg.bounded_kv_pages}
+        if self.expert_cache is not None:
+            out["expert_cache"] = self.expert_cache.telemetry()
+        return out
+
     def generate(self, requests: List[Request]) -> Dict[int, Result]:
         """Length-bucketed batched generation."""
         buckets: Dict[int, List[Request]] = {}

@@ -1,0 +1,181 @@
+"""True-adaptive (ARC/CAR) paged-KV pool: residency coherence with the host
+oracles and decision parity with the batched sweep engine on the pool's own
+access stream — the acceptance property of the unified policy core
+(DESIGN.md §7).
+
+The pool's stream is reconstructed host-side exactly as the device code
+issues it: each page-boundary allocation is one complete-miss access of the
+new page id; each decode step's referenced pages (paper hit rule) are hit
+accesses in slot order.  Host ARC/CAR oracles replay the stream access for
+access; their resident sets must equal the pool's resident page ids at
+every step, and the sweep engine's hit bits on the same stream must equal
+the oracle's (i.e. the pool, the oracles, and the engine all make the same
+decisions)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import paged_kv
+from repro.core import make_policy
+from repro.core.jax_policies import simulate_trace_batched
+
+KVD = 4
+
+
+def _pool_resident_pages(apool, page_size):
+    """Per-sequence set of resident page ids, from the pool's metadata."""
+    ps = np.asarray(apool.pool.page_start)
+    return [set((row[row >= 0] // page_size).tolist()) for row in ps]
+
+
+def _policy_resident_pages(apool, core):
+    """Per-sequence set of resident page ids, from the AdaptiveState."""
+    res = np.asarray(core.resident_mask(apool.policy))[:, 0]
+    blocks = np.asarray(apool.policy.blocks)[:, 0]
+    return [set(blocks[b][res[b]].tolist()) for b in range(blocks.shape[0])]
+
+
+def _drive(policy, pages, page_size, steps, B=2, seed=0):
+    """Drive an adaptive pool; return (streams, oracle_hits) per sequence,
+    asserting three-way residency coherence (pool metadata == AdaptiveState
+    == host oracle) after every pool operation."""
+    core = paged_kv.adaptive_core(policy, B, pages)
+    apool = paged_kv.init_adaptive_pool(
+        B, pages, page_size, KVD, jnp.float32, policy
+    )
+    insert = jax.jit(
+        lambda ap, k, pos: paged_kv.adaptive_insert_token(
+            ap, k, k, pos, page_size, core
+        )
+    )
+    score = jax.jit(
+        lambda ap, m: paged_kv.adaptive_score_update(ap, m, page_size, core)
+    )
+    oracles = [make_policy(core.kind, pages) for _ in range(B)]
+    streams = [[] for _ in range(B)]
+    oracle_hits = [[] for _ in range(B)]
+
+    def check(tag):
+        pool_res = _pool_resident_pages(apool, page_size)
+        state_res = _policy_resident_pages(apool, core)
+        for b in range(B):
+            assert pool_res[b] == state_res[b] == oracles[b].resident_set(), (
+                f"{policy} seq {b} diverged at {tag}: pool={pool_res[b]} "
+                f"state={state_res[b]} oracle={oracles[b].resident_set()}"
+            )
+
+    rng = np.random.RandomState(seed)
+    for pos in range(steps):
+        nk = jnp.asarray(rng.randn(B, KVD), jnp.float32)
+        if pos % page_size == 0:
+            pid = pos // page_size
+            for b in range(B):
+                streams[b].append(pid)
+                oracle_hits[b].append(oracles[b].access(pid))
+        apool = insert(apool, nk, jnp.asarray(pos, jnp.int32))
+        check(f"insert pos={pos}")
+        mass = rng.rand(B, pages * page_size)
+        mass = mass / mass.sum(-1, keepdims=True)
+        # mirror the device referenced-page rule (paper hit rule) host-side
+        ps = np.asarray(apool.pool.page_start)
+        per_page = mass.reshape(B, pages, page_size).sum(-1)
+        resident = (ps >= 0).sum(-1, keepdims=True)
+        tau = 1.0 / np.maximum(resident, 1)
+        referenced = (per_page >= tau) & (ps >= 0)
+        apool = score(apool, jnp.asarray(mass, jnp.float32))
+        for b in range(B):
+            for s in range(pages):  # slot order — the documented tie order
+                if referenced[b, s]:
+                    pid = int(ps[b, s]) // page_size
+                    streams[b].append(pid)
+                    hit = oracles[b].access(pid)
+                    assert hit, f"{policy}: reference of non-resident page {pid}"
+                    oracle_hits[b].append(hit)
+        check(f"score pos={pos}")
+    return streams, oracle_hits
+
+
+@pytest.mark.parametrize("policy", ["arc_adaptive", "car_adaptive"])
+def test_adaptive_pool_matches_oracle_and_engine(policy):
+    """The acceptance property: pool evictions/residency == host oracle ==
+    batched sweep engine, on the identical access stream."""
+    pages, page_size, steps = 3, 4, 60
+    streams, oracle_hits = _drive(policy, pages, page_size, steps)
+    kind = paged_kv.TRUE_ADAPTIVE_KV[policy]
+    for b, (tr, ref) in enumerate(zip(streams, oracle_hits)):
+        engine = np.asarray(
+            simulate_trace_batched(np.asarray(tr), [kind], [pages])
+        )[0, 0, 0]
+        divergence = np.flatnonzero(engine != np.asarray(ref))
+        assert divergence.size == 0, (
+            f"{policy} seq {b}: engine diverged from the pool's stream at "
+            f"access {divergence[0] if divergence.size else '?'}"
+        )
+
+
+@pytest.mark.parametrize("policy", ["arc_adaptive", "car_adaptive"])
+@pytest.mark.parametrize("pages,page_size,steps", [(2, 2, 30), (4, 3, 75)])
+def test_adaptive_pool_invariants(policy, pages, page_size, steps):
+    """Classic pool invariants that survive the adaptive mode: bounded
+    residency, page-aligned starts, one clock tick per decode step.  (The
+    classic mode's open-page pin does NOT survive: true ARC/CAR may evict a
+    just-completed page if it is T1's LRU — a genuine policy decision.)"""
+    B = 2
+    core = paged_kv.adaptive_core(policy, B, pages)
+    apool = paged_kv.init_adaptive_pool(
+        B, pages, page_size, KVD, jnp.float32, policy
+    )
+    insert = jax.jit(
+        lambda ap, k, pos: paged_kv.adaptive_insert_token(
+            ap, k, k, pos, page_size, core
+        )
+    )
+    score = jax.jit(
+        lambda ap, m: paged_kv.adaptive_score_update(ap, m, page_size, core)
+    )
+    rng = np.random.RandomState(1)
+    for pos in range(steps):
+        nk = jnp.asarray(rng.randn(B, KVD), jnp.float32)
+        apool = insert(apool, nk, jnp.asarray(pos, jnp.int32))
+        mass = rng.rand(B, pages * page_size)
+        mass = mass / mass.sum(-1, keepdims=True)
+        apool = score(apool, jnp.asarray(mass, jnp.float32))
+    ps = np.asarray(apool.pool.page_start)
+    resident = ps >= 0
+    pages_written = (steps + page_size - 1) // page_size
+    assert (resident.sum(-1) == min(pages_written, pages)).all()
+    assert (ps[resident] % page_size == 0).all()
+    assert (ps[resident] < steps).all()
+    assert (np.asarray(apool.pool.clock) == steps).all()
+    # policy residency count agrees with the pool's
+    res_mask = np.asarray(core.resident_mask(apool.policy))[:, 0]
+    assert (res_mask.sum(-1) == resident.sum(-1)).all()
+
+
+def test_adaptive_pool_p_static_without_ghost_hits():
+    """Decode page ids only grow, so ghost hits can't occur and ``p`` must
+    stay at its initial 0 — pinning the documented limitation so a future
+    change that starts adapting p (e.g. prefix re-reference) is noticed."""
+    B, pages, page_size = 1, 3, 2
+    core = paged_kv.adaptive_core("arc_adaptive", B, pages)
+    apool = paged_kv.init_adaptive_pool(
+        B, pages, page_size, KVD, jnp.float32, "arc_adaptive"
+    )
+    insert = jax.jit(
+        lambda ap, k, pos: paged_kv.adaptive_insert_token(
+            ap, k, k, pos, page_size, core
+        )
+    )
+    score = jax.jit(
+        lambda ap, m: paged_kv.adaptive_score_update(ap, m, page_size, core)
+    )
+    rng = np.random.RandomState(3)
+    for pos in range(24):
+        nk = jnp.asarray(rng.randn(B, KVD), jnp.float32)
+        apool = insert(apool, nk, jnp.asarray(pos, jnp.int32))
+        mass = rng.rand(B, pages * page_size)
+        mass = mass / mass.sum(-1, keepdims=True)
+        apool = score(apool, jnp.asarray(mass, jnp.float32))
+    assert float(np.asarray(apool.policy.p).max()) == 0.0

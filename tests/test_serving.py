@@ -96,3 +96,156 @@ def test_expert_cache_runtime_counts():
     assert rt.accesses == 6
     assert rt.transfers == 3  # 1,2 cold + 3 cold (second 3 hits)
     assert 0 < rt.hit_ratio < 1
+
+
+def test_expert_cache_route_miss_accounting():
+    """route()'s return value, .transfers and .accesses stay mutually
+    consistent under hits, misses and evictions — per layer."""
+    rt = ExpertCacheRuntime(n_layers=2, capacity=2, policy="lru")
+    assert rt.route(0, [1, 2]) == 2  # both cold
+    assert rt.route(0, [1, 2]) == 0  # both resident
+    assert rt.route(0, [3]) == 1  # evicts LRU expert 1
+    assert rt.route(0, [1]) == 1  # 1 was evicted: miss again
+    assert rt.route(1, [1]) == 1  # layers are independent instances
+    assert rt.route(0, []) == 0  # empty router step: no accounting drift
+    assert rt.accesses == 7
+    assert rt.transfers == 5
+    assert rt.hit_ratio == 2 / 7
+    t = rt.telemetry()
+    assert t["policy"] == "lru" and t["backend"] == "host"
+    assert t["transfers"] == 5 and t["accesses"] == 7
+
+
+@pytest.mark.parametrize("policy", ["awrp", "lfu", "arc", "car"])
+def test_expert_cache_device_path_matches_host(policy):
+    """The batched (n_layers,)-row device path — unified policy core —
+    reproduces the host dict-oracle accounting exactly, including true
+    arc/car, via both per-layer route() and batched route_step()."""
+    rng = np.random.RandomState(4)
+    host = ExpertCacheRuntime(n_layers=3, capacity=4, policy=policy)
+    dev = ExpertCacheRuntime(n_layers=3, capacity=4, policy=policy, device=True)
+    # interleave per-layer routes and full-step batched routes
+    for step in range(15):
+        if step % 3 == 2:
+            idx = rng.randint(0, 10, size=(3, 2))
+            m_h, m_d = host.route_step(idx), dev.route_step(idx)
+        else:
+            layer = int(rng.randint(0, 3))
+            experts = rng.randint(0, 10, size=2).tolist()
+            m_h = host.route(layer, experts)
+            m_d = dev.route(layer, experts)
+        assert m_h == m_d, f"step {step}: host {m_h} != device {m_d}"
+    assert host.accesses == dev.accesses
+    assert host.transfers == dev.transfers
+    assert host.hit_ratio == dev.hit_ratio
+    assert dev.telemetry()["backend"] == "device"
+
+
+def test_expert_cache_route_step_shape_validation():
+    rt = ExpertCacheRuntime(n_layers=2, capacity=2, policy="awrp", device=True)
+    with pytest.raises(ValueError, match="n_layers"):
+        rt.route_step(np.zeros((3, 2), np.int32))
+
+
+def test_expert_cache_rejects_shared_instance_across_layers():
+    """A prebuilt policy instance can only back a single layer — sharing one
+    residency set across layers would corrupt miss accounting."""
+    from repro.core.policies import LRU
+
+    with pytest.raises(ValueError, match="shared across layers"):
+        ExpertCacheRuntime(n_layers=2, capacity=2, policy=LRU(2))
+    rt = ExpertCacheRuntime(n_layers=1, capacity=2, policy=LRU(2))
+    assert rt.route(0, [1]) == 1  # instance accepted for the single layer
+    assert rt.telemetry()["policy"] == "lru"
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: store / policy residency coherence
+# ---------------------------------------------------------------------------
+
+
+def _assert_coherent(pc):
+    from repro.cache.prefix_cache import prompt_key  # noqa: F401
+
+    assert set(pc.store) == pc.policy.resident_set(), (
+        f"store {sorted(pc.store)} != policy {sorted(pc.policy.resident_set())}"
+    )
+
+
+@pytest.mark.parametrize("policy", ["awrp", "lru", "fifo", "lfu", "arc", "car"])
+def test_prefix_cache_store_policy_coherence(policy):
+    """The store and the policy's resident set never diverge — across
+    misses, hits, evictions, re-inserts of resident keys, and lookups of
+    long-evicted keys — for every policy the factory can build."""
+    rng = np.random.RandomState(9)
+    pc = PrefixCache(capacity=3, policy=policy)
+    prompts = [[i, i + 1] for i in range(8)]
+    for step in range(120):
+        p = prompts[int(rng.randint(len(prompts)))]
+        if rng.rand() < 0.5:
+            got = pc.lookup(p)
+            if got is not None:
+                assert got == tuple(p)
+        else:
+            pc.insert(p, tuple(p))  # re-insert path when already resident
+        _assert_coherent(pc)
+        assert len(pc.store) <= 3
+    t = pc.telemetry()
+    assert t["policy"] == policy
+    assert t["entries"] == len(pc.store)
+    assert 0.0 <= t["hit_ratio"] <= 1.0
+
+
+def test_prefix_cache_reinsert_updates_value_without_eviction():
+    pc = PrefixCache(capacity=2, policy="awrp")
+    pc.insert([1, 2], "a")
+    pc.insert([3, 4], "b")
+    before = set(pc.store)
+    pc.insert([1, 2], "a2")  # re-insert: value swap, no eviction
+    assert set(pc.store) == before
+    assert pc.lookup([1, 2]) == "a2"
+    _assert_coherent(pc)
+
+
+def test_prefix_cache_accepts_prebuilt_policy_instance():
+    from repro.core.policies import LRU
+
+    pc = PrefixCache(capacity=2, policy=LRU(2))
+    pc.insert([1], "x")
+    assert pc.telemetry()["policy"] == "lru"
+    _assert_coherent(pc)
+
+
+# ---------------------------------------------------------------------------
+# engine telemetry + true-adaptive bounded KV
+# ---------------------------------------------------------------------------
+
+
+def test_engine_telemetry_one_code_path(engine):
+    engine.generate([Request(50, list(range(2, 18)), max_new_tokens=2)])
+    t = engine.telemetry()
+    assert t["prefix_cache"]["policy"] == "awrp"
+    assert {"hits", "misses", "hit_ratio"} <= set(t["prefix_cache"])
+    assert t["engine"]["prefills"] >= 1
+    assert "expert_cache" not in t  # none attached on this config
+    rt = ExpertCacheRuntime(n_layers=1, capacity=2, policy="lru")
+    engine.expert_cache = rt
+    rt.route(0, [5])
+    t = engine.telemetry()
+    assert t["expert_cache"]["policy"] == "lru"
+    assert t["expert_cache"]["transfers"] == 1
+
+
+@pytest.mark.parametrize("kv_policy", ["arc_adaptive", "car_adaptive"])
+def test_bounded_kv_true_adaptive_engine_runs_past_pool_capacity(kv_policy):
+    """End-to-end: the decode scan carries AdaptiveState planes through the
+    model cache tree and keeps decoding far past the resident pool."""
+    cfg = load_smoke_config("gemma3_27b")
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32",
+                              bounded_kv_pages=3, page_size=8,
+                              kv_policy=kv_policy)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, max_len=128, kv_mode="paged")
+    out = eng.generate([Request(0, list(range(1, 17)), max_new_tokens=40)])
+    assert len(out[0].tokens) == 40  # decoded far past 3*8=24 resident tokens
+    assert eng.telemetry()["kv_pool"]["policy"] == kv_policy
