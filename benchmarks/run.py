@@ -28,8 +28,11 @@ import inspect
 import traceback
 
 #: sections cheap enough for the CI bench-smoke job (the rest stress model /
-#: serving layers and take minutes even at reduced sizes)
-SMOKE_SECTIONS = ("table1", "trace_suite", "policy_overhead", "kernel_bench")
+#: serving layers and take minutes even at reduced sizes).  policy_overhead
+#: precedes tenancy: both contribute to the --sweep-json artifact and
+#: tenancy merges into the record policy_overhead writes.
+SMOKE_SECTIONS = ("table1", "trace_suite", "policy_overhead", "tenancy",
+                  "kernel_bench")
 
 
 def main(argv=None) -> None:
@@ -76,6 +79,7 @@ def main(argv=None) -> None:
         serve_policy_bench,
         serve_quality_bench,
         table1,
+        tenancy_bench,
         trace_suite,
     )
 
@@ -96,6 +100,9 @@ def main(argv=None) -> None:
         "serve_quality": (
             "Bounded-KV serving quality (AWRP vs baselines)",
             serve_quality_bench.run),
+        "tenancy": (
+            "Multi-tenant tenancy (shared vs quota rows vs rebalancing)",
+            tenancy_bench.run),
         "expert_cache": ("Expert cache (MoE serving)", expert_cache_bench.run),
         "grad_compress": ("Gradient compression", grad_compress_bench.run),
         "roofline": ("Roofline report (from dry-run artifacts)",

@@ -37,7 +37,13 @@ from typing import Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.policy_core import (
+    _TAG_B1,
+    _TAG_B2,
+    _TAG_T1,
+    _TAG_T2,
     AdaptiveCore,
     AdaptiveState,
     awrp_victim_rows,
@@ -252,8 +258,6 @@ def seed_adaptive_state(
     order, ``p = 0``, empty ghost lists.  This is exactly the state the host
     ARC/CAR oracles reach on that access stream (the ctr value itself never
     affects decisions, only the stamp order does)."""
-    from repro.core.policy_core import _TAG_T1
-
     L = 2 * pages
     lane = jnp.arange(L, dtype=jnp.int32)
     res = lane < n_res
@@ -265,6 +269,174 @@ def seed_adaptive_state(
         ref=jnp.zeros((batch, 1, L), jnp.int32),
         p=jnp.zeros((batch, 1), jnp.float32),
         ctr=jnp.full((batch, 1), n_res, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# ghost-hit feed: cross-request re-references for the true-adaptive pool
+# ---------------------------------------------------------------------------
+#
+# Within one decode, page ids only grow, so ghost hits can never occur and
+# ``p`` never moves (DESIGN.md §2 caveat).  The re-references that drive
+# ARC/CAR's adaptation come from *across* requests: a prefix-cache miss that
+# re-prefills a page position the previous request's pool had evicted is
+# exactly a ghost hit.  ``replay_page_ids`` feeds such a re-prefill stream
+# through a persisted ``AdaptiveState``; ``reseed_from_ghosts`` then rebuilds
+# a pool-coherent seeded state that carries the adapted ``p`` and the
+# surviving ghost directory into the new request (DESIGN.md §8).
+
+
+def _flatten_adaptive(state: AdaptiveState):
+    """Collapse a (possibly layer-stacked) state's leading dims to one rows
+    axis: planes ``(..., S, L) -> (R, 1, L)``.  Only ``S == 1`` layouts (the
+    serving pools') are supported."""
+    lead = state.p.shape[:-1]
+    if state.p.shape[-1] != 1:
+        raise ValueError(f"expected single-set planes, got p shape {state.p.shape}")
+    L = state.blocks.shape[-1]
+    R = int(np.prod(lead)) if lead else 1
+    flat = AdaptiveState(
+        blocks=state.blocks.reshape(R, 1, L),
+        tag=state.tag.reshape(R, 1, L),
+        stamp=state.stamp.reshape(R, 1, L),
+        ref=state.ref.reshape(R, 1, L),
+        p=state.p.reshape(R, 1),
+        ctr=state.ctr.reshape(R, 1),
+    )
+    return flat, lead, L
+
+
+def _unflatten_adaptive(flat: AdaptiveState, lead, L: int) -> AdaptiveState:
+    return AdaptiveState(
+        blocks=flat.blocks.reshape(lead + (1, L)),
+        tag=flat.tag.reshape(lead + (1, L)),
+        stamp=flat.stamp.reshape(lead + (1, L)),
+        ref=flat.ref.reshape(lead + (1, L)),
+        p=flat.p.reshape(lead + (1,)),
+        ctr=flat.ctr.reshape(lead + (1,)),
+    )
+
+
+def replay_page_ids(
+    state: AdaptiveState, kind: str, pages: int, page_ids
+) -> Tuple[AdaptiveState, jax.Array]:
+    """Replay ``page_ids`` (in order) through a persisted adaptive state —
+    one real ``on_access`` each, so ghost hits adapt ``p`` with the exact
+    host-oracle arithmetic.  Works on tail-layer ``(B, 1, L)`` and stacked
+    ``(n_rep, B, 1, L)`` planes alike.  Returns ``(new_state, ghost_hits)``
+    with ghost_hits counted per row (leading dims preserved)."""
+    flat, lead, L = _flatten_adaptive(state)
+    R = flat.p.shape[0]
+    core = AdaptiveCore(kind=TRUE_ADAPTIVE_KV.get(kind, kind), caps=(pages,) * R)
+
+    def body(st, pid):
+        ghost = jnp.any(
+            (st.blocks[:, 0] == pid)
+            & ((st.tag[:, 0] == _TAG_B1) | (st.tag[:, 0] == _TAG_B2)),
+            axis=-1,
+        )
+        st, _ = core.on_access(st, jnp.full((R,), pid, dtype=jnp.int32))
+        return st, ghost
+
+    flat, ghosts = jax.lax.scan(
+        body, flat, jnp.asarray(page_ids, dtype=jnp.int32)
+    )
+    gh = jnp.sum(ghosts, axis=0, dtype=jnp.int32)
+    return _unflatten_adaptive(flat, lead, L), gh.reshape(lead)
+
+
+def reseed_from_ghosts(
+    prev: AdaptiveState, kind: str, pages: int, n_have: int, n_res: int
+) -> Tuple[AdaptiveState, np.ndarray]:
+    """Cross-request reseed of the true-adaptive pool policy: replay the
+    re-prefill page stream (ids ``0..n_have-1``) through the previous
+    request's final state — previously evicted pages ghost-hit and move
+    ``p`` — then rebuild residency to match the freshly seeded pool (the
+    last ``n_res`` pages, ``pool_from_prefill``'s layout):
+
+    * target pages resident after the replay keep their T1/T2 membership,
+      stamps and ref bits (a ghost hit re-entered them at T2 — preserved);
+    * target pages the replay itself evicted re-enter as fresh T1 inserts;
+    * non-target residents are demoted to their ghost list at the MRU end
+      (the pool dropped them — record it where the policy can see it);
+    * ghost lists are trimmed LRU-first to ARC/CAR's directory invariants
+      (``|T1|+|B1| <= c``, total ≤ 2c).
+
+    Runs host-side (numpy) — this is a request-boundary operation, not a
+    decode-step one.  Returns ``(state, ghost_hits-per-row)``."""
+    replayed, ghost_hits = replay_page_ids(prev, kind, pages, np.arange(n_have))
+    flat, lead, L = _flatten_adaptive(replayed)
+    blocks = np.asarray(flat.blocks[:, 0]).copy()
+    tag = np.asarray(flat.tag[:, 0]).copy()
+    stamp = np.asarray(flat.stamp[:, 0]).copy()
+    ref = np.asarray(flat.ref[:, 0]).copy()
+    p = np.asarray(flat.p[:, 0])
+    R = blocks.shape[0]
+    cap = pages
+    first_page = n_have - n_res
+    target = set(range(first_page, n_have))
+
+    nb = np.full((R, L), -1, dtype=np.int32)
+    nt = np.zeros((R, L), dtype=np.int32)
+    ns = np.zeros((R, L), dtype=np.int32)
+    nf = np.zeros((R, L), dtype=np.int32)
+    nctr = np.zeros(R, dtype=np.int32)
+    for r in range(R):
+        res, ghosts, demoted = [], [], []  # (id, tag, stamp, ref) tuples
+        for lane in range(L):
+            t = int(tag[r, lane])
+            if t == 0:
+                continue
+            bid, st_, rf = int(blocks[r, lane]), int(stamp[r, lane]), int(ref[r, lane])
+            if t in (_TAG_T1, _TAG_T2):
+                if bid in target:
+                    res.append((bid, t, st_, rf))
+                else:  # pool dropped it: demote to the matching ghost list
+                    demoted.append((bid, _TAG_B1 if t == _TAG_T1 else _TAG_B2,
+                                    st_, 0))
+            elif bid not in target:  # ghost survives unless re-resident;
+                ghosts.append((bid, t, st_, 0))  # re-residents re-enter below
+        hi = max(
+            [st_ for _, _, st_, _ in res + ghosts + demoted], default=0
+        )
+        # demoted residents append at their ghost lists' MRU end (fresh
+        # stamps, relative order preserved); target pages the replay itself
+        # evicted (or popped entirely) re-enter as fresh T1 inserts
+        for bid, t, _, _ in sorted(demoted, key=lambda e: e[2]):
+            hi += 1
+            ghosts.append((bid, t, hi, 0))
+        for pid in sorted(target - {e[0] for e in res}):
+            hi += 1
+            res.append((pid, _TAG_T1, hi, 0))
+        # directory invariants, LRU-first trims
+        def count(entries, *tags):
+            return sum(1 for e in entries if e[1] in tags)
+
+        while count(res, _TAG_T1) + count(ghosts, _TAG_B1) > cap:
+            b1 = [e for e in ghosts if e[1] == _TAG_B1]
+            ghosts.remove(min(b1, key=lambda e: e[2]))
+        while len(res) + len(ghosts) > 2 * cap:
+            b2 = [e for e in ghosts if e[1] == _TAG_B2]
+            if not b2:
+                b1 = [e for e in ghosts if e[1] == _TAG_B1]
+                ghosts.remove(min(b1, key=lambda e: e[2]))
+            else:
+                ghosts.remove(min(b2, key=lambda e: e[2]))
+        for lane, (bid, t, st_, rf) in enumerate(res + ghosts):
+            nb[r, lane], nt[r, lane], ns[r, lane], nf[r, lane] = bid, t, st_, rf
+        nctr[r] = hi
+
+    out = AdaptiveState(
+        blocks=jnp.asarray(nb)[:, None, :],
+        tag=jnp.asarray(nt)[:, None, :],
+        stamp=jnp.asarray(ns)[:, None, :],
+        ref=jnp.asarray(nf)[:, None, :],
+        p=jnp.asarray(p, dtype=jnp.float32)[:, None],
+        ctr=jnp.asarray(nctr)[:, None],
+    )
+    return (
+        _unflatten_adaptive(out, lead, L),
+        np.asarray(ghost_hits).reshape(lead if lead else (1,)),
     )
 
 

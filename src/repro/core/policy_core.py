@@ -48,7 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple, Union
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +63,7 @@ __all__ = [
     "FlatState",
     "AdaptiveState",
     "PolicyState",
+    "RowCounters",
     "FlatCore",
     "AdaptiveCore",
     "PolicyCore",
@@ -566,6 +567,79 @@ def _renorm_stamps(state: AdaptiveState, renorm_at: int) -> AdaptiveState:
 # ---------------------------------------------------------------------------
 
 
+class RowCounters(NamedTuple):
+    """Per-row cumulative accounting — ``(rows,)`` int32 device arrays.
+
+    Carried OUTSIDE the policy state pytrees on purpose: `FlatState` /
+    `AdaptiveState` layouts are scan carries in the sweep engine and the
+    paged-KV pool, and growing them would change every consumer's pytree
+    structure (and its XLA in-place-carry behaviour).  Accounting callers —
+    the tenancy manager, benchmarks — thread a `RowCounters` alongside the
+    state through ``on_access_counted``."""
+
+    hits: jax.Array  # (rows,) int32
+    misses: jax.Array  # (rows,) int32
+    evictions: jax.Array  # (rows,) int32
+
+
+class _Accounting:
+    """Per-row accounting shared by both core layouts (DESIGN.md §8).
+
+    An eviction is detected structurally, not policy-by-policy: a miss
+    inserts exactly one resident, so the count of residents displaced is
+    ``occupancy_before + 1 - occupancy_after`` (0 when the insert landed in
+    a free lane, 1 when a resident was overwritten / demoted to a ghost
+    list — including ARC's discard-T1-outright and ghost-hit REPLACE
+    paths).  This holds for every device policy because none of them evicts
+    on a hit and every miss inserts."""
+
+    def init_counters(self) -> RowCounters:
+        z = jnp.zeros((self.rows,), dtype=jnp.int32)
+        return RowCounters(hits=z, misses=z, evictions=z)
+
+    def on_access_counted(
+        self,
+        state: "PolicyState",
+        counters: RowCounters,
+        ids: jax.Array,
+        *,
+        active: jax.Array | None = None,
+    ) -> Tuple["PolicyState", RowCounters, jax.Array]:
+        """``on_access`` + per-row hit/miss/eviction accounting."""
+        occ_b = self.occupancy(state)
+        new_state, hit = self.on_access(state, ids, active=active)
+        occ_a = self.occupancy(new_state)
+        act = (
+            jnp.ones((self.rows,), dtype=bool)
+            if active is None
+            else jnp.asarray(active, dtype=bool)
+        )
+        miss = act & ~hit
+        evicted = jnp.where(miss, occ_b + 1 - occ_a, 0).astype(jnp.int32)
+        new_counters = RowCounters(
+            hits=counters.hits + hit.astype(jnp.int32),
+            misses=counters.misses + miss.astype(jnp.int32),
+            evictions=counters.evictions + evicted,
+        )
+        return new_state, new_counters, hit
+
+    def row_telemetry(
+        self, state: "PolicyState", counters: RowCounters
+    ) -> Dict[str, jax.Array]:
+        """Per-row accounting as ``(rows,)`` device arrays — the uniform
+        record the tenancy layer (and any batched consumer) reports from:
+        cumulative hits/misses/evictions, current occupancy, and the static
+        per-row capacity."""
+        return {
+            "hits": counters.hits,
+            "misses": counters.misses,
+            "evictions": counters.evictions,
+            "accesses": counters.hits + counters.misses,
+            "occupancy": self.occupancy(state),
+            "capacity": jnp.asarray(self.row_capacity, dtype=jnp.int32),
+        }
+
+
 def _select_state(active, new_state, old_state):
     """Row-masked pytree select: rows where ``active`` is False keep their
     old state (used for the serving callers' masked no-op accesses)."""
@@ -578,7 +652,7 @@ def _select_state(active, new_state, old_state):
 
 
 @dataclasses.dataclass(frozen=True)
-class FlatCore:
+class FlatCore(_Accounting):
     """Static spec for a batch of flat-state policy rows (awrp/lru/fifo/lfu).
 
     ``pids``/``ways`` are per-row: mixed policies and mixed capacities batch
@@ -611,8 +685,23 @@ class FlatCore:
     def W(self) -> int:
         return self.lanes if self.lanes is not None else max(self.ways)
 
+    @property
+    def row_capacity(self) -> Tuple[int, ...]:
+        """Total resident capacity per row (= ways summed over sets)."""
+        return tuple(w * self.num_sets for w in self.ways)
+
     def _masks(self) -> _GridMasks:
         return _make_masks(np.asarray(self.pids), np.asarray(self.ways), self.W)
+
+    def occupancy(self, state: FlatState) -> jax.Array:
+        """(rows,) int32 resident-block count (dead padding lanes excluded —
+        they never hold blocks from `on_access`, but quota shrinks performed
+        by the tenancy layer rewrite planes directly, so mask anyway)."""
+        live = ~self._masks().dead  # (B, W)
+        occ = state.blocks >= 0
+        if self.num_sets == 1:
+            return jnp.sum(occ & live, axis=-1, dtype=jnp.int32)
+        return jnp.sum(occ & live[:, None, :], axis=(-2, -1), dtype=jnp.int32)
 
     def init(self) -> FlatState:
         B, S, W = self.rows, self.num_sets, self.W
@@ -695,7 +784,7 @@ class FlatCore:
 
 
 @dataclasses.dataclass(frozen=True)
-class AdaptiveCore:
+class AdaptiveCore(_Accounting):
     """Static spec for a batch of adaptive (arc/car) policy rows.
 
     ``caps`` is the per-row per-set capacity c; the directory spans
@@ -811,6 +900,15 @@ class AdaptiveCore:
         """(rows, num_sets, L) bool — lanes whose block is cache-resident
         (T1 or T2; ghost-directory entries are NOT resident)."""
         return (state.tag == _TAG_T1) | (state.tag == _TAG_T2)
+
+    @property
+    def row_capacity(self) -> Tuple[int, ...]:
+        """Total resident capacity per row (= caps summed over sets)."""
+        return tuple(c * self.num_sets for c in self.caps)
+
+    def occupancy(self, state: AdaptiveState) -> jax.Array:
+        """(rows,) int32 resident-page count (ghost entries excluded)."""
+        return jnp.sum(self.resident_mask(state), axis=(-2, -1), dtype=jnp.int32)
 
 
 PolicyCore = Union[FlatCore, AdaptiveCore]

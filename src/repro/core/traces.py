@@ -25,6 +25,7 @@ __all__ = [
     "trace_zipf",
     "trace_markov",
     "trace_scan_mix",
+    "trace_multi_tenant",
     "paper_trace",
     "TRACES",
 ]
@@ -189,6 +190,60 @@ def trace_scan_mix(
             out.append(hot_blocks + (scan_pos - hot_blocks + i) % scan_blocks)
         scan_pos += scan_len
     return np.asarray(out[:n_accesses], dtype=np.int64)
+
+
+def trace_multi_tenant(
+    n_accesses: int = 10_000,
+    n_tenants: int = 3,
+    working_set: int = 200,
+    alphas=(1.2, 0.8, 0.0),
+    mix=None,
+    phase_at: float = 0.5,
+    phase_shift: int = 97,
+    seed: int = 0,
+):
+    """Interleaved multi-tenant stream: ``n_tenants`` competing request
+    streams with DISJOINT working sets (tenant t lives in
+    ``[t*working_set, (t+1)*working_set)``) and per-tenant zipf skews
+    (``alphas[t]``; 0.0 = uniform — the no-locality tenant adaptive
+    policies should learn to stop caching for).  ``mix`` is the per-tenant
+    interleave probability (default uniform).  At ``phase_at`` every
+    tenant's hot set rotates by ``phase_shift`` addresses within its own
+    region — the phase-change moment where frequency-only rankings go
+    stale and the adaptive/tenancy machinery has to re-rank.
+
+    Returns ``(tenant_ids, addresses)`` — two aligned int64 arrays; demux
+    with ``addresses[tenant_ids == t]`` to replay one tenant's stream
+    against a host oracle (the property-test contract for the tenancy
+    manager's per-row accounting)."""
+    if len(alphas) < n_tenants:
+        raise ValueError(f"need {n_tenants} alphas, got {len(alphas)}")
+    rng = np.random.RandomState(seed)
+    mix = np.full(n_tenants, 1.0 / n_tenants) if mix is None else np.asarray(
+        mix, dtype=np.float64)
+    mix = mix / mix.sum()
+    probs = []
+    for t in range(n_tenants):
+        a = float(alphas[t])
+        ranks = np.arange(1, working_set + 1, dtype=np.float64)
+        p = ranks ** (-a) if a > 0 else np.ones(working_set)
+        probs.append(p / p.sum())
+    tenant_ids = rng.choice(n_tenants, size=n_accesses, p=mix)
+    offsets = rng.rand(n_accesses)  # one uniform draw per access, reused
+    out = np.empty(n_accesses, dtype=np.int64)
+    switch = int(n_accesses * phase_at)
+    for t in range(n_tenants):
+        sel = tenant_ids == t
+        # inverse-CDF sampling from this tenant's zipf ranks
+        cdf = np.cumsum(probs[t])
+        local = np.searchsorted(cdf, offsets[sel], side="right")
+        local = np.minimum(local, working_set - 1)
+        # phase change: rotate the rank->address map within the region
+        idx = np.where(sel)[0]
+        shifted = (local + phase_shift) % working_set
+        local = np.where(idx >= switch, shifted, local)
+        out[idx] = t * working_set + local
+    return tenant_ids.astype(np.int64), out
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3_27b \
       --requests 8 --new-tokens 32 --kv-mode paged --kv-policy awrp
+
+Multi-tenant serving (DESIGN.md §8) — one policy-core row per tenant,
+per-tenant quotas/telemetry and pressure-driven admission:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3_27b \
+      --requests 8 --tenants "alice=4,bob=2" --repeat-prompts
 """
 
 from __future__ import annotations
@@ -26,39 +32,79 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--kv-mode", default="full", choices=("full", "paged"))
     ap.add_argument("--kv-policy", default="awrp",
-                    choices=("awrp", "lru", "fifo", "lfu"))
+                    choices=("awrp", "lru", "fifo", "lfu",
+                             "arc_adaptive", "car_adaptive"))
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--repeat-prompts", action="store_true",
                     help="send duplicate prompts to exercise the prefix cache")
+    ap.add_argument("--tenants", default=None, metavar="NAME=QUOTA,...",
+                    help="multi-tenant mode: per-tenant prompt-cache quotas "
+                    "(one policy-core row each); requests round-robin the "
+                    "tenants and telemetry reports per-tenant hit ratios "
+                    "and pressure")
+    ap.add_argument("--auto-rebalance", action="store_true",
+                    help="move quota lanes to pressured tenants from the "
+                    "coldest (AWRP tenant ranking)")
     args = ap.parse_args()
+
+    tenants = None
+    if args.tenants:
+        tenants = {}
+        for part in args.tenants.split(","):
+            name, _, quota = part.partition("=")
+            tenants[name.strip()] = int(quota)
 
     cfg = load_smoke_config(args.arch)
     cfg = dataclasses.replace(cfg, kv_policy=args.kv_policy)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_len=args.max_len, kv_mode=args.kv_mode)
+    engine = ServeEngine(cfg, params, max_len=args.max_len,
+                         kv_mode=args.kv_mode, tenants=tenants,
+                         auto_rebalance=args.auto_rebalance)
 
     rng = np.random.RandomState(0)
+    names = list(tenants) if tenants else ["default"]
     reqs = []
     for i in range(args.requests):
-        if args.repeat_prompts and i % 2 == 1:
-            prompt = reqs[-1].prompt[:]
+        if args.repeat_prompts and i >= 2 * len(names):
+            # repeat an earlier prompt of the SAME tenant (prefix reuse)
+            prompt = reqs[i - 2 * len(names)].prompt[:]
         else:
             prompt = rng.randint(1, cfg.vocab, size=args.prompt_len).tolist()
-        reqs.append(Request(i, prompt, max_new_tokens=args.new_tokens))
+        reqs.append(Request(i, prompt, max_new_tokens=args.new_tokens,
+                            tenant_id=names[i % len(names)]))
 
     t0 = time.time()
-    results = engine.generate(reqs)
+    if tenants is None:
+        results = engine.generate(reqs)
+    else:
+        # per-request submission: the prefix path and admission controller
+        # act request-by-request, as a serving frontend would drive them
+        results = {}
+        for r in reqs:
+            results.update(engine.generate([r]))
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in results.values())
     print(f"arch={cfg.name} kv_mode={args.kv_mode} policy={args.kv_policy}")
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s host-side)")
-    print(f"prefix cache: hits={engine.prefix_cache.hits} "
-          f"misses={engine.prefix_cache.misses} "
-          f"(ratio {engine.prefix_cache.hit_ratio:.2f})")
+    tel = engine.telemetry()
+    if tenants is None:
+        pc = tel["prefix/cache"]
+        print(f"prefix cache: hits={pc['hits']} misses={pc['misses']} "
+              f"(ratio {pc['hit_ratio']:.2f})")
+    else:
+        for name in names:
+            d = tel[f"prefix/{name}"]
+            print(f"tenant {name}: quota={d['quota']} "
+                  f"hit_ratio={d['hit_ratio']:.2f} "
+                  f"evictions={d['evictions']} pressure={d['pressure']:.2f}")
+        print(f"admission: shed={engine.stats['shed']} "
+              f"deferred={engine.stats['deferred']} "
+              f"rebalances={engine.stats['rebalances']}")
     for rid in sorted(results)[:4]:
         r = results[rid]
-        print(f"  req {rid}: cached={r.prefill_cached} tokens={r.tokens[:8]}...")
+        print(f"  req {rid}: cached={r.prefill_cached} status={r.status} "
+              f"tokens={r.tokens[:8]}...")
 
 
 if __name__ == "__main__":

@@ -12,10 +12,19 @@ configs; the same jitted functions are what the dry-run lowers for the
   * bounded-KV mode: ``kv_mode="paged"`` serves long contexts in a fixed
     page pool with the paper's eviction rule (``cfg.kv_policy`` — including
     the true-adaptive ``arc_adaptive``/``car_adaptive`` pool mode);
+  * multi-tenant mode: ``tenants={name: quota}`` mounts the prompt cache as
+    one policy-core row per tenant (``serve.tenancy``, DESIGN.md §8) with
+    per-tenant accounting, an eviction-pressure admission controller
+    (accept / defer / shed) and optional AWRP-ranked quota rebalancing;
+  * ghost-hit feed: in the true-adaptive paged mode the engine persists
+    each tenant's final pool policy state and, on a prefix-cache miss that
+    re-prefills previously evicted page positions, replays those page ids
+    through it (``paged_kv.reseed_from_ghosts``) — the cross-request
+    re-references that actually move ARC/CAR's ``p`` (DESIGN.md §8);
   * per-policy telemetry from one code path: every cache the engine holds
-    (prompt cache, optional MoE expert cache) is built through the unified
-    policy factory (``policy_core.make_cache_policy`` / ``make_core``) and
-    reports a uniform ``telemetry()`` dict — see ``ServeEngine.telemetry``.
+    is built through the unified policy factory and reports a uniform
+    ``telemetry()`` dict under a namespaced key (``prefix/...``,
+    ``kv/...``, ``expert/...``) — see ``ServeEngine.telemetry``.
 """
 
 from __future__ import annotations
@@ -28,9 +37,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import paged_kv
+from repro.cache.paged_kv import AdaptivePagedPool
 from repro.cache.prefix_cache import PrefixCache
 from repro.models import model as M
 from repro.serve.sampling import sample
+from repro.serve.tenancy import (
+    DEFER,
+    SHED,
+    AdmissionController,
+    TenantPrefixCache,
+)
 
 
 @dataclasses.dataclass
@@ -39,6 +56,7 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    tenant_id: str = "default"
 
 
 @dataclasses.dataclass
@@ -47,19 +65,36 @@ class Result:
     tokens: List[int]
     prefill_cached: bool
     latency_s: float
+    status: str = "ok"  # "ok" | "shed"
+
+
+def _is_apool(x) -> bool:
+    return isinstance(x, AdaptivePagedPool)
 
 
 class ServeEngine:
     def __init__(self, cfg, params, *, max_len: int = 512,
                  kv_mode: str = "full", prefix_cache_entries: int = 8,
-                 prefix_policy: str = "awrp", expert_cache=None, seed: int = 0):
+                 prefix_policy: str = "awrp", expert_cache=None, seed: int = 0,
+                 tenants: Optional[Dict[str, int]] = None,
+                 admission: Optional[AdmissionController] = None,
+                 auto_rebalance: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.kv_mode = kv_mode
-        # prefix_policy may be a name or a prebuilt policy instance — both
-        # resolve through the unified factory inside PrefixCache
-        self.prefix_cache = PrefixCache(prefix_cache_entries, prefix_policy)
+        self.tenants = dict(tenants) if tenants else None
+        self.auto_rebalance = bool(auto_rebalance)
+        if self.tenants is None:
+            # prefix_policy may be a name or a prebuilt policy instance —
+            # both resolve through the unified factory inside PrefixCache
+            self.prefix_cache = PrefixCache(prefix_cache_entries, prefix_policy)
+            self.tenant_cache = None
+            self.admission = None
+        else:
+            self.prefix_cache = None
+            self.tenant_cache = TenantPrefixCache(self.tenants, prefix_policy)
+            self.admission = admission or AdmissionController()
         #: optional ExpertCacheRuntime the model's MoE router reports into
         self.expert_cache = expert_cache
         self.key = jax.random.PRNGKey(seed)
@@ -69,7 +104,14 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, c: M.decode_step(p, cfg, t, c, kv_mode=kv_mode)
         )
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
+                      "shed": 0, "deferred": 0, "kv_ghost_hits": 0,
+                      "rebalances": 0}
+        #: ghost-hit feed: per-tenant persisted pool policy states (one list
+        #: entry per AdaptivePagedPool node of the cache tree, in traversal
+        #: order) + per-tenant ghost-hit counters
+        self._kv_sessions: Dict[str, list] = {}
+        self._kv_ghost_hits: Dict[str, int] = {}
 
     # -- internals ----------------------------------------------------------
     def _align(self, prompt: List[int]) -> List[int]:
@@ -98,53 +140,183 @@ class ServeEngine:
         self.stats["prefills"] += 1
         return logits, caches
 
+    # -- ghost-hit feed (true-adaptive paged KV, DESIGN.md §8) --------------
+    @property
+    def _ghost_feed_on(self) -> bool:
+        return (self.kv_mode == "paged"
+                and self.cfg.kv_policy in paged_kv.TRUE_ADAPTIVE_KV)
+
+    def _kv_reseed(self, caches, tenant: str, plen: int):
+        """On a re-prefill, replay the prefilled page ids through the
+        tenant's persisted pool policy state: previously evicted positions
+        ghost-hit and adapt ``p``; the rebuilt state seeds the new pool."""
+        prev = self._kv_sessions.get(tenant)
+        if prev is None:
+            return caches
+        page, P = self.cfg.page_size, self.cfg.bounded_kv_pages
+        n_have = plen // page
+        n_res = min(n_have, P)
+        it = iter(prev)
+
+        def reseed(x):
+            if not _is_apool(x):
+                return x
+            state, gh = paged_kv.reseed_from_ghosts(
+                next(it), self.cfg.kv_policy, P, n_have, n_res)
+            n = int(np.asarray(gh).sum())
+            self.stats["kv_ghost_hits"] += n
+            self._kv_ghost_hits[tenant] = self._kv_ghost_hits.get(tenant, 0) + n
+            return AdaptivePagedPool(pool=x.pool, policy=state)
+
+        return jax.tree.map(reseed, caches, is_leaf=_is_apool)
+
+    def _kv_persist(self, caches, tenant: str) -> None:
+        """Persist the request's final pool policy states (ghost lists, p)
+        so the tenant's next re-prefill can replay into them."""
+        states = []
+        jax.tree.map(
+            lambda x: states.append(x.policy) if _is_apool(x) else None,
+            caches, is_leaf=_is_apool)
+        if states:
+            self._kv_sessions[tenant] = states
+
     # -- public -------------------------------------------------------------
     def telemetry(self) -> Dict[str, dict]:
         """Per-policy hit ratios for every cache the engine serves from,
         reported through one code path: each cache exposes the same
-        ``telemetry()`` dict (policy name, accesses, hit_ratio), so adding a
-        cache layer never adds a bespoke stats format.  The bounded-KV
-        policy is included by name (its hits are device-side attention
-        references, surfaced by benchmarks/serve_policy_bench.py)."""
-        out: Dict[str, dict] = {
-            "prefix_cache": self.prefix_cache.telemetry(),
-            "engine": dict(self.stats),
-        }
+        ``telemetry()`` dict (policy name, accesses, hit_ratio).  Keys are
+        namespaced by cache layer — ``prefix/...``, ``kv/...``,
+        ``expert/...`` — so two caches running the same policy never
+        collide.  Multi-tenant engines report one ``prefix/<tenant>`` entry
+        per tenant (quota, occupancy, pressure, hit ratio — the manager's
+        per-row device accounting) and, in the true-adaptive paged mode, a
+        ``kv/<tenant>`` entry with the ghost-hit feed's adaptation state."""
+        out: Dict[str, dict] = {"engine": dict(self.stats)}
+        if self.tenants is None:
+            out["prefix/cache"] = self.prefix_cache.telemetry()
+        else:
+            for t, d in self.tenant_cache.telemetry().items():
+                out[f"prefix/{t}"] = d
         if self.kv_mode == "paged":
-            out["kv_pool"] = {"policy": self.cfg.kv_policy,
+            out["kv/pool"] = {"policy": self.cfg.kv_policy,
                               "pages": self.cfg.bounded_kv_pages}
+            for t, states in self._kv_sessions.items():
+                p_mean = float(np.mean([np.asarray(s.p).mean()
+                                        for s in states]))
+                out[f"kv/{t}"] = {
+                    "policy": self.cfg.kv_policy,
+                    "ghost_hits": self._kv_ghost_hits.get(t, 0),
+                    "p_mean": p_mean,
+                }
         if self.expert_cache is not None:
-            out["expert_cache"] = self.expert_cache.telemetry()
+            out["expert/cache"] = self.expert_cache.telemetry()
         return out
 
     def generate(self, requests: List[Request]) -> Dict[int, Result]:
-        """Length-bucketed batched generation."""
-        buckets: Dict[int, List[Request]] = {}
+        """Length-bucketed batched generation.  Multi-tenant engines run an
+        admission pass first: shed requests return immediately with
+        ``status="shed"``; deferred requests run after the unpressured
+        work (and are shed only if their tenant is still at shed pressure
+        by then)."""
+        out: Dict[int, Result] = {}
         for r in requests:
             r.prompt = self._align(r.prompt)
-            buckets.setdefault(len(r.prompt), []).append(r)
 
-        out: Dict[int, Result] = {}
-        for plen, reqs in sorted(buckets.items()):
-            out.update(self._run_bucket(plen, reqs))
+        if self.tenants is None:
+            phases = [list(requests)]
+        else:
+            accepted, deferred = [], []
+            for r in requests:
+                decision = self.admission.decide(
+                    self.tenant_cache.manager, r.tenant_id)
+                if decision == SHED:
+                    self.stats["shed"] += 1
+                    # refused work is probation time: decay the EWMA so a
+                    # shed tenant can re-enter once its burst has passed
+                    self.tenant_cache.manager.decay_pressure(r.tenant_id)
+                    out[r.rid] = Result(rid=r.rid, tokens=[],
+                                        prefill_cached=False, latency_s=0.0,
+                                        status="shed")
+                elif decision == DEFER:
+                    self.stats["deferred"] += 1
+                    deferred.append(r)
+                else:
+                    accepted.append(r)
+            phases = [accepted, deferred]
+
+        for phase_i, phase in enumerate(phases):
+            if phase_i == 1:  # deferred retry: shed only if still critical
+                kept = []
+                for r in phase:
+                    if (self.admission.decide(self.tenant_cache.manager,
+                                              r.tenant_id) == SHED):
+                        self.stats["shed"] += 1
+                        # same probation credit as a first-pass shed
+                        self.tenant_cache.manager.decay_pressure(r.tenant_id)
+                        out[r.rid] = Result(rid=r.rid, tokens=[],
+                                            prefill_cached=False,
+                                            latency_s=0.0, status="shed")
+                    else:
+                        kept.append(r)
+                phase = kept
+            buckets: Dict[int, List[Request]] = {}
+            for r in phase:
+                buckets.setdefault(len(r.prompt), []).append(r)
+            for plen, reqs in sorted(buckets.items()):
+                out.update(self._run_bucket(plen, reqs))
         return out
+
+    def _maybe_rebalance(self, tenant: str) -> None:
+        """AWRP-ranked quota rebalancing: when a tenant's pressure crosses
+        the defer threshold, move one quota lane to it from the
+        lowest-ranked (coldest) tenant — the paper's eviction rule applied
+        to tenants instead of lines."""
+        if not (self.auto_rebalance and self.tenants is not None):
+            return
+        mgr = self.tenant_cache.manager
+        if mgr.is_adaptive:
+            return  # adaptive quotas are fixed (tenancy module docstring)
+        if mgr.pressure(tenant) < self.admission.defer_at:
+            return
+        coldest = mgr.rank_tenants()[0]
+        if coldest == tenant:
+            return
+        moved, _ = self.tenant_cache.rebalance(tenant, 1)
+        self.stats["rebalances"] += moved
+
+    def _lookup_prefix(self, req: Request):
+        if self.tenants is None:
+            return self.prefix_cache.lookup(req.prompt)
+        return self.tenant_cache.lookup(req.tenant_id, req.prompt)
+
+    def _insert_prefix(self, req: Request, payload) -> None:
+        if self.tenants is None:
+            self.prefix_cache.insert(req.prompt, payload)
+        else:
+            self.tenant_cache.insert(req.tenant_id, req.prompt, payload)
+            self._maybe_rebalance(req.tenant_id)
 
     def _run_bucket(self, plen: int, reqs: List[Request]) -> Dict[int, Result]:
         t0 = time.time()
         prompts = [r.prompt for r in reqs]
         max_new = max(r.max_new_tokens for r in reqs)
+        single = len(reqs) == 1
 
         cached = None
-        if len(reqs) == 1:
-            cached = self.prefix_cache.lookup(prompts[0])
+        if single:
+            cached = self._lookup_prefix(reqs[0])
         if cached is not None:
             logits, caches = cached
             was_cached = True
         else:
             logits, caches = self._batch_prefill(prompts)
             was_cached = False
-            if len(reqs) == 1:
-                self.prefix_cache.insert(prompts[0], (logits, caches))
+            if single:
+                if self._ghost_feed_on:
+                    # prefix miss -> this prefill re-references page
+                    # positions the tenant's previous pool may have evicted
+                    caches = self._kv_reseed(caches, reqs[0].tenant_id, plen)
+                self._insert_prefix(reqs[0], (logits, caches))
 
         toks = sample(logits[:, -1:], self.key, temperature=0.0,
                       vocab=self.cfg.vocab)
@@ -157,6 +329,8 @@ class ServeEngine:
                           vocab=self.cfg.vocab)
             generated.append(toks)
             self.stats["decode_steps"] += 1
+        if single and self._ghost_feed_on:
+            self._kv_persist(caches, reqs[0].tenant_id)
         gen = np.concatenate([np.asarray(t) for t in generated], axis=1)
         dt = time.time() - t0
         self.stats["tokens"] += gen.size

@@ -1,0 +1,480 @@
+"""Multi-tenant cache tenancy subsystem (DESIGN.md §8).
+
+One batched policy core, one row per tenant: the masked dead-lane encoding
+the sweep engine uses for mixed capacities becomes the quota mechanism —
+``FlatCore(ways=quotas)`` / ``AdaptiveCore(caps=quotas)`` mounts every
+tenant's cache as an independent row of the SAME device program, and
+per-tenant request streams are replayed as masked ``on_access`` calls
+(rows of inactive tenants are bit-exact no-ops).  Per-tenant accounting
+comes from the core itself (``row_telemetry``), so the numbers the serving
+engine reports are the numbers the sweep engine would measure on the
+demuxed streams — property-tested against the host oracles.
+
+Three layers:
+
+* ``TenantCacheManager`` — the core mount: routing, accounting, the
+  eviction-pressure EWMA, AWRP-ranked quota rebalancing.  Tenants are
+  ranked by the paper's own eq. (1) lifted one altitude: ``W_t =
+  F_t / (N − R_t)`` where F_t is the tenant's access count, R_t the clock
+  of its last access and N the manager clock — the coldest tenant (lowest
+  weight) donates quota lanes first, exactly the rule AWRP applies to
+  cache lines.
+* ``AdmissionController`` — maps the pressure signal to accept / defer /
+  shed decisions for the serving engine.
+* ``TenantPrefixCache`` — the prefix cache on top of the manager: one
+  payload store per tenant, policy residency and store contents coherent
+  per row (the same invariant ``PrefixCache`` keeps for one tenant).
+
+Quota rebalancing is supported for flat cores (awrp/lru/fifo/lfu): a
+shrink keeps the row's best blocks by its own policy ranking and compacts
+them into the surviving quota lanes (evicted ids are returned so payload
+stores stay coherent).  Adaptive rows (arc/car) carry ghost directories
+whose invariants (``|T1|+|B1| ≤ c``, total ≤ 2c) do not survive a cap
+change without replaying history, so their quotas are fixed — construct
+the manager with the quotas you mean to keep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy_core import (
+    ADAPTIVE_POLICIES,
+    JAX_POLICIES,
+    POLICY_IDS,
+    AdaptiveCore,
+    FlatCore,
+    RowCounters,
+)
+
+__all__ = [
+    "TenantCacheManager",
+    "AdmissionController",
+    "TenantPrefixCache",
+    "ACCEPT",
+    "DEFER",
+    "SHED",
+]
+
+ACCEPT, DEFER, SHED = "accept", "defer", "shed"
+
+
+class TenantCacheManager:
+    """One batched policy core with one row per tenant (quota = row ways).
+
+    ``quotas`` is an ordered ``{tenant: capacity}`` mapping; ``policy`` any
+    device policy name (flat: awrp/lru/fifo/lfu; adaptive: arc/car).  Flat
+    cores pad every row to ``lanes = sum(quotas)`` so rebalancing can grow
+    any tenant up to the whole pool without changing plane shapes.
+    """
+
+    def __init__(
+        self,
+        quotas: Dict[str, int],
+        policy: str = "awrp",
+        *,
+        pressure_alpha: float = 0.1,
+    ):
+        if not quotas:
+            raise ValueError("need at least one tenant")
+        for t, q in quotas.items():
+            if int(q) <= 0:
+                raise ValueError(f"tenant {t!r} quota must be positive, got {q}")
+        self.tenants: List[str] = list(quotas)
+        self._row_of = {t: i for i, t in enumerate(self.tenants)}
+        self.policy_name = policy
+        self.quotas = {t: int(q) for t, q in quotas.items()}
+        self.pressure_alpha = float(pressure_alpha)
+        self._pressure = np.zeros(len(self.tenants), dtype=np.float64)
+        # tenant-altitude AWRP metadata for ranking: F_t / R_t / clock N
+        self._tf = np.zeros(len(self.tenants), dtype=np.int64)
+        self._tr = np.zeros(len(self.tenants), dtype=np.int64)
+        self._tclock = 0
+        self.core = self._build_core()
+        self.state = self.core.init()
+        self.counters: RowCounters = self.core.init_counters()
+        self._step = self._jit_step()
+
+    # -- core mount ---------------------------------------------------------
+    @property
+    def rows(self) -> int:
+        return len(self.tenants)
+
+    @property
+    def is_adaptive(self) -> bool:
+        return self.policy_name in ADAPTIVE_POLICIES
+
+    def _build_core(self):
+        q = tuple(self.quotas[t] for t in self.tenants)
+        if self.policy_name in JAX_POLICIES:
+            return FlatCore(
+                pids=(POLICY_IDS[self.policy_name],) * len(q),
+                ways=q,
+                lanes=sum(self.quotas.values()),
+            )
+        if self.policy_name in ADAPTIVE_POLICIES:
+            return AdaptiveCore(kind=self.policy_name, caps=q)
+        raise ValueError(
+            f"not a device policy: {self.policy_name!r}; "
+            f"have {JAX_POLICIES + ADAPTIVE_POLICIES}"
+        )
+
+    def _jit_step(self):
+        """One jitted masked step for the host `access` path (the eager
+        adaptive step functions are dispatch-bound per access; the jit is
+        compiled once per core spec — i.e. once per rebalance)."""
+        core = self.core
+        return jax.jit(
+            lambda st, ctr, ids, act: core.on_access_counted(
+                st, ctr, ids, active=act
+            )
+        )
+
+    def row(self, tenant: str) -> int:
+        try:
+            return self._row_of[tenant]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {tenant!r}; have {self.tenants}"
+            ) from None
+
+    # -- access -------------------------------------------------------------
+    def _resident_ids(self, state, r: int) -> set:
+        if self.is_adaptive:
+            blocks = np.asarray(state.blocks[r, 0])
+            res = np.asarray(self.core.resident_mask(state)[r, 0])
+            return set(blocks[res].tolist())
+        blocks = np.asarray(state.blocks[r])
+        return set(blocks[blocks >= 0].tolist())
+
+    def access(self, tenant: str, key: int) -> Tuple[bool, List[int]]:
+        """One access of ``key`` by ``tenant``: a masked single-row step of
+        the shared core.  Returns ``(hit, evicted_keys)`` — evicted keys are
+        what the row's policy displaced, for payload-store coherence."""
+        r = self.row(tenant)
+        before = self._resident_ids(self.state, r)
+        active = jnp.arange(self.rows) == r
+        ids = jnp.full((self.rows,), int(key), dtype=jnp.int32)
+        self.state, self.counters, hit = self._step(
+            self.state, self.counters, ids, active
+        )
+        after = self._resident_ids(self.state, r)
+        evicted = sorted(before - after)
+        # pressure EWMA + tenant-altitude AWRP metadata
+        a = self.pressure_alpha
+        self._pressure[r] = (1 - a) * self._pressure[r] + a * len(evicted)
+        self._tclock += 1
+        self._tf[r] += 1
+        self._tr[r] = self._tclock
+        return bool(np.asarray(hit)[r]), evicted
+
+    def access_stream(
+        self, tenant_rows: np.ndarray, keys: np.ndarray
+    ) -> np.ndarray:
+        """Replay a whole interleaved stream device-side: one jitted scan of
+        masked ``on_access_counted`` steps (access i activates only row
+        ``tenant_rows[i]``).  Returns the per-access hit bits.  State and
+        counters advance exactly as ``access`` would; the pressure EWMA
+        folds each tenant's batch in ONE step of equivalent total weight
+        (``1-(1-a)^n`` toward the batch mean) — same asymptotics, but
+        order-independent within the batch, so it can differ from the
+        per-access path by O(a) (evicted-key reporting and the exact EWMA
+        need the host path)."""
+        tenant_rows = np.asarray(tenant_rows, dtype=np.int32)
+        keys = np.asarray(keys, dtype=np.int32)
+        if tenant_rows.shape != keys.shape or tenant_rows.ndim != 1:
+            raise ValueError(
+                f"tenant_rows {tenant_rows.shape} and keys {keys.shape} must "
+                "be equal-length 1-D arrays"
+            )
+        core, R = self.core, self.rows
+        ctr_before = jax.tree.map(np.asarray, self.counters)
+
+        def body(carry, xs):
+            state, ctr = carry
+            row, key = xs
+            active = jnp.arange(R) == row
+            state, ctr, hit = core.on_access_counted(
+                state, ctr, jnp.full((R,), key, dtype=jnp.int32), active=active
+            )
+            return (state, ctr), hit[row]
+
+        (self.state, self.counters), hits = jax.lax.scan(
+            body, (self.state, self.counters), (jnp.asarray(tenant_rows),
+                                                jnp.asarray(keys))
+        )
+        # fold the batch into the per-tenant EWMAs / AWRP metadata (one
+        # equivalent-weight step per tenant, not per access — see docstring)
+        ctr_after = jax.tree.map(np.asarray, self.counters)
+        d_acc = (ctr_after.hits + ctr_after.misses) - (
+            ctr_before.hits + ctr_before.misses
+        )  # per-row access/eviction deltas; folded per tenant, see docstring
+        d_ev = ctr_after.evictions - ctr_before.evictions
+        a = self.pressure_alpha
+        for r in range(R):
+            n = int(d_acc[r])
+            if n == 0:
+                continue
+            w = 1.0 - (1.0 - a) ** n
+            self._pressure[r] = (1 - w) * self._pressure[r] + w * (
+                int(d_ev[r]) / n
+            )
+            self._tf[r] += n
+        # last-access clocks from the stream's own order
+        base = self._tclock
+        self._tclock += len(tenant_rows)
+        for i, r in enumerate(tenant_rows.tolist()):
+            self._tr[r] = base + i + 1
+        return np.asarray(hits)
+
+    # -- signals ------------------------------------------------------------
+    def accesses(self, tenant: str) -> int:
+        """Host-side access count for ``tenant`` (the tenant-altitude F_t)
+        — no device sync, unlike ``row_telemetry`` (the admission hot
+        path's warmup check reads this per request)."""
+        return int(self._tf[self.row(tenant)])
+
+    def pressure(self, tenant: str) -> float:
+        """Eviction-pressure EWMA: evictions per access of this tenant,
+        exponentially weighted (``pressure_alpha``).  1.0 = every recent
+        access displaced a resident entry (the quota is thrashing)."""
+        return float(self._pressure[self.row(tenant)])
+
+    def decay_pressure(self, tenant: str) -> float:
+        """One EWMA step toward 0 without an access.  The EWMA only updates
+        on the tenant's own accesses, so a fully shed tenant would otherwise
+        stay above the shed threshold forever — the serving engine calls
+        this when it sheds, so refused work doubles as probation time."""
+        r = self.row(tenant)
+        self._pressure[r] *= 1.0 - self.pressure_alpha
+        return float(self._pressure[r])
+
+    def tenant_weights(self) -> Dict[str, float]:
+        """Paper eq. (1) at tenant altitude: ``W_t = F_t / (N − R_t)``,
+        the ranking the rebalancer uses (never-accessed tenants weigh 0)."""
+        out = {}
+        for t in self.tenants:
+            r = self.row(t)
+            dt = max(self._tclock - self._tr[r], 1)
+            out[t] = float(self._tf[r]) / float(dt) if self._tf[r] else 0.0
+        return out
+
+    def rank_tenants(self) -> List[str]:
+        """Tenants coldest-first (lowest AWRP weight; ties by row order) —
+        the order quota lanes are reclaimed in."""
+        w = self.tenant_weights()
+        return sorted(self.tenants, key=lambda t: (w[t], self.row(t)))
+
+    # -- quota rebalancing (flat cores) -------------------------------------
+    def _flat_keep_order(self, r: int) -> np.ndarray:
+        """Occupied lanes of row ``r`` in eviction order (first = evicted
+        first) under the row's own policy — the flat victim rule on host."""
+        st = self.state
+        blocks = np.asarray(st.blocks[r])
+        f = np.asarray(st.f[r]).astype(np.float64)
+        rr = np.asarray(st.r[r]).astype(np.float64)
+        clock = float(np.asarray(st.clock[r]))
+        occ = np.where(blocks >= 0)[0]
+        if self.policy_name == "awrp":
+            # weights at clock N+1 — the clock every live victim decision is
+            # made at (`_flat_victim` receives state.clock + 1)
+            key = f[occ] / np.maximum((clock + 1.0) - rr[occ], 1.0)
+            order = np.lexsort((occ, key))
+        elif self.policy_name in ("lru", "fifo"):
+            order = np.lexsort((occ, rr[occ]))
+        else:  # lfu: min F, ties by recency then lane
+            order = np.lexsort((occ, rr[occ], f[occ]))
+        return occ[order]
+
+    def rebalance(
+        self, to: str, n: int = 1, *, min_quota: int = 1
+    ) -> Tuple[int, Dict[str, List[int]]]:
+        """Move up to ``n`` quota lanes to tenant ``to``, reclaiming them
+        from the lowest-AWRP-ranked tenants first (never below
+        ``min_quota``, never from ``to`` itself).  Shrunk rows evict their
+        policy's worst blocks and compact the rest.  Returns ``(moved,
+        evicted_by)`` — the lane count actually moved (a donor with spare
+        empty lanes moves quota without evicting anything, so the dict
+        alone cannot signal success) and the evicted keys per tenant for
+        payload-store coherence.  Flat cores only — adaptive quotas are
+        fixed (see module docstring)."""
+        if self.is_adaptive:
+            raise NotImplementedError(
+                "adaptive (arc/car) tenant quotas are fixed: ghost-directory "
+                "invariants do not survive a capacity change"
+            )
+        if n <= 0:
+            raise ValueError(f"n must be positive, got {n}")
+        moved, evicted_by = 0, {}
+        for donor in self.rank_tenants():
+            if donor == to:
+                continue
+            while moved < n and self.quotas[donor] > min_quota:
+                self.quotas[donor] -= 1
+                self.quotas[to] += 1
+                moved += 1
+            if moved >= n:
+                break
+        if moved == 0:
+            return 0, {}
+        # rebuild the core for the new ways tuple, then repair shrunk rows
+        old_ways = self.core.ways
+        self.core = self._build_core()
+        self._step = self._jit_step()
+        for t in self.tenants:
+            r = self.row(t)
+            new_w = self.quotas[t]
+            if new_w >= old_ways[r]:
+                continue
+            ev = self._shrink_flat_row(r, new_w)
+            if ev:
+                evicted_by[t] = ev
+                a = self.pressure_alpha
+                self._pressure[r] = (1 - a) * self._pressure[r] + a * len(ev)
+        return moved, evicted_by
+
+    def _shrink_flat_row(self, r: int, new_ways: int) -> List[int]:
+        """Drop the row to ``new_ways`` live lanes: evict the policy's worst
+        blocks (host replay of the flat victim rule), compact survivors into
+        lanes ``[0, new_ways)`` preserving lane order, clear the rest."""
+        order = self._flat_keep_order(r)  # eviction order, worst first
+        n_drop = max(len(order) - new_ways, 0)
+        dropped, kept = order[:n_drop], np.sort(order[n_drop:])
+        st = self.state
+        blocks = np.asarray(st.blocks[r]).copy()
+        f = np.asarray(st.f[r]).copy()
+        rr = np.asarray(st.r[r]).copy()
+        evicted = blocks[dropped].tolist()
+        W = blocks.shape[0]
+        nb = np.full(W, -1, dtype=np.int32)
+        nf = np.zeros(W, dtype=np.int32)
+        nr = np.zeros(W, dtype=np.int32)
+        k = len(kept)
+        nb[:k], nf[:k], nr[:k] = blocks[kept], f[kept], rr[kept]
+        self.state = st._replace(
+            blocks=st.blocks.at[r].set(nb),
+            f=st.f.at[r].set(nf),
+            r=st.r.at[r].set(nr),
+        )
+        return evicted
+
+    # -- telemetry ----------------------------------------------------------
+    def row_telemetry(self) -> Dict[str, np.ndarray]:
+        """The core's per-row accounting, pulled to host: hits / misses /
+        evictions / accesses / occupancy / capacity, each ``(rows,)``."""
+        t = self.core.row_telemetry(self.state, self.counters)
+        return {k: np.asarray(v) for k, v in t.items()}
+
+    def telemetry(self) -> Dict[str, dict]:
+        """Per-tenant stats dicts, same shape for every tenant — the one
+        code path ``ServeEngine.telemetry`` reports tenancy from."""
+        rows = self.row_telemetry()
+        out = {}
+        for t in self.tenants:
+            r = self.row(t)
+            acc = int(rows["accesses"][r])
+            out[t] = {
+                "policy": self.policy_name,
+                "quota": self.quotas[t],
+                "occupancy": int(rows["occupancy"][r]),
+                "hits": int(rows["hits"][r]),
+                "misses": int(rows["misses"][r]),
+                "evictions": int(rows["evictions"][r]),
+                "accesses": acc,
+                "hit_ratio": int(rows["hits"][r]) / acc if acc else 0.0,
+                "pressure": float(self._pressure[r]),
+            }
+        return out
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Pressure → accept / defer / shed.
+
+    ``defer_at`` and ``shed_at`` are thresholds on the manager's
+    eviction-pressure EWMA; below ``warmup`` accesses a tenant is always
+    accepted (the EWMA hasn't seen enough of the stream to mean anything).
+    Deferred work is retried by the caller after the pressured tenant's
+    EWMA has had time to decay; shed work is refused outright."""
+
+    defer_at: float = 0.5
+    shed_at: float = 0.85
+    warmup: int = 8
+
+    def __post_init__(self):
+        if not 0.0 <= self.defer_at <= self.shed_at:
+            raise ValueError(
+                f"need 0 <= defer_at <= shed_at, got {self.defer_at} / "
+                f"{self.shed_at}"
+            )
+
+    def decide(self, manager: TenantCacheManager, tenant: str) -> str:
+        if manager.accesses(tenant) < self.warmup:
+            return ACCEPT
+        p = manager.pressure(tenant)
+        if p >= self.shed_at:
+            return SHED
+        if p >= self.defer_at:
+            return DEFER
+        return ACCEPT
+
+
+class TenantPrefixCache:
+    """Per-tenant prefix/prompt cache over one ``TenantCacheManager`` row
+    per tenant: quota-bounded payload stores whose residency is exactly the
+    shared core's per-row resident set (the ``PrefixCache`` coherence
+    invariant, one row per tenant).  Exactly ONE policy access is issued
+    per request — on the hit at ``lookup`` or on the miss at ``insert`` —
+    so the per-row counters reproduce a host oracle run on the demuxed
+    per-tenant stream bit-for-bit."""
+
+    def __init__(self, quotas: Dict[str, int], policy: str = "awrp", **kw):
+        self.manager = TenantCacheManager(quotas, policy, **kw)
+        self.stores: Dict[str, Dict[int, Any]] = {
+            t: {} for t in self.manager.tenants
+        }
+
+    def lookup(self, tenant: str, tokens) -> Optional[Any]:
+        key = _prompt_key(tokens)
+        store = self.stores[tenant]
+        if key in store:
+            self.manager.access(tenant, key)  # policy hit
+            return store[key]
+        return None  # the miss is accounted when the caller inserts
+
+    def insert(self, tenant: str, tokens, payload: Any) -> None:
+        key = _prompt_key(tokens)
+        store = self.stores[tenant]
+        _, evicted = self.manager.access(tenant, key)
+        for ev in evicted:
+            store.pop(ev, None)
+        store[key] = payload
+
+    def rebalance(self, to: str, n: int = 1, **kw) -> Tuple[int, Dict[str, List[int]]]:
+        """Manager rebalance + payload-store coherence for shrunk tenants."""
+        moved, evicted_by = self.manager.rebalance(to, n, **kw)
+        for t, keys in evicted_by.items():
+            for k in keys:
+                self.stores[t].pop(k, None)
+        return moved, evicted_by
+
+    def telemetry(self) -> Dict[str, dict]:
+        out = self.manager.telemetry()
+        for t, d in out.items():
+            d["entries"] = len(self.stores[t])
+        return out
+
+
+def _prompt_key(tokens) -> int:
+    """Non-negative int32 prompt key: the device core's id planes are int32
+    (host ``PrefixCache`` keys are 63-bit; here the key must round-trip the
+    row's ``blocks`` plane).  ``% INT_MAX`` also keeps INT_MAX itself free —
+    it's the adaptive cores' never-seen probe id."""
+    from repro.cache.prefix_cache import prompt_key
+
+    return prompt_key(tokens) % (2**31 - 1)

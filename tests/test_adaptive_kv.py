@@ -179,3 +179,91 @@ def test_adaptive_pool_p_static_without_ghost_hits():
         mass = mass / mass.sum(-1, keepdims=True)
         apool = score(apool, jnp.asarray(mass, jnp.float32))
     assert float(np.asarray(apool.policy.p).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ghost-hit feed: cross-request re-references (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _prev_state_with_ghosts(kv_policy, pages=3):
+    """A decode-shaped session whose prompt pages (0, 1) were referenced
+    once then evicted into B1 while later pages were re-referenced — the
+    directory shape a re-prefill ghost-hits into."""
+    core = paged_kv.adaptive_core(kv_policy, 1, pages)
+    st = core.init()
+    for pid in [0, 1, 2, 2, 3, 3, 4, 4, 5, 5]:
+        st, _ = core.on_access(st, jnp.asarray([pid]))
+    return st
+
+
+@pytest.mark.parametrize("kv_policy", ["arc_adaptive", "car_adaptive"])
+def test_reseed_from_ghosts_adapts_p_and_keeps_invariants(kv_policy):
+    """Replaying a re-prefill of previously evicted page positions through
+    the persisted state moves ``p`` (B1 ghost hits increment it — the exact
+    host-oracle arithmetic), and the rebuilt state is pool-coherent: the
+    resident set is exactly the seeded pages and ARC/CAR's directory
+    invariants hold."""
+    from repro.core.policy_core import _TAG_B1, _TAG_B2, _TAG_T1, _TAG_T2
+
+    pages = 3
+    prev = _prev_state_with_ghosts(kv_policy, pages)
+    new_st, gh = paged_kv.reseed_from_ghosts(
+        prev, kv_policy, pages, n_have=2, n_res=2)
+    assert int(np.asarray(gh).sum()) > 0
+    assert float(np.asarray(new_st.p)[0, 0]) > 0.0  # adapted, not reset
+    tag = np.asarray(new_st.tag)[0, 0]
+    blocks = np.asarray(new_st.blocks)[0, 0]
+    resident = set(blocks[(tag == _TAG_T1) | (tag == _TAG_T2)].tolist())
+    assert resident == {0, 1}  # exactly the pool's seeded pages
+    n1 = int((tag == _TAG_T1).sum())
+    n3 = int((tag == _TAG_B1).sum())
+    total = int((tag > 0).sum())
+    assert n1 + n3 <= pages and total <= 2 * pages  # directory invariants
+    stamps = np.asarray(new_st.stamp)[0, 0][tag > 0]
+    assert len(set(stamps.tolist())) == len(stamps)  # within-list order total
+
+
+@pytest.mark.parametrize("kv_policy", ["arc_adaptive", "car_adaptive"])
+def test_reseeded_pool_decodes_coherently(kv_policy):
+    """After a ghost-feed reseed the pool keeps the residency-coherence
+    contract: policy residents == pool residents at every decode step."""
+    pages, page_size, B = 3, 2, 1
+    core = paged_kv.adaptive_core(kv_policy, B, pages)
+    prev = _prev_state_with_ghosts(kv_policy, pages)
+    new_st, _ = paged_kv.reseed_from_ghosts(
+        prev, kv_policy, pages, n_have=2, n_res=2)
+    # pool seeded the way pool_from_prefill does for S=4, pages 0..1
+    pool = paged_kv.init_pool(B, pages, page_size, KVD, jnp.float32)
+    pool = pool._replace(
+        f=jnp.asarray([[1, 1, 0]], jnp.int32),
+        r=jnp.asarray([[1, 2, 0]], jnp.int32),
+        page_start=jnp.asarray([[0, 2, -1]], jnp.int32),
+        clock=jnp.asarray([2], jnp.int32),
+        open_slot=jnp.asarray([1], jnp.int32),
+    )
+    apool = paged_kv.AdaptivePagedPool(pool=pool, policy=new_st)
+    rng = np.random.RandomState(0)
+    for pos in range(4, 20):
+        nk = jnp.asarray(rng.randn(B, KVD), jnp.float32)
+        apool = paged_kv.adaptive_insert_token(
+            apool, nk, nk, jnp.asarray(pos, jnp.int32), page_size, core)
+        mass = rng.rand(B, pages * page_size)
+        mass = jnp.asarray(mass / mass.sum(-1, keepdims=True), jnp.float32)
+        apool = paged_kv.adaptive_score_update(apool, mass, page_size, core)
+        assert _pool_resident_pages(apool, page_size) == \
+            _policy_resident_pages(apool, core), pos
+
+
+def test_replay_page_ids_handles_stacked_layers():
+    """The replay flattens arbitrary leading dims (layer-stacked states) and
+    restores them — ghost-hit counts come back per row."""
+    pages = 3
+    core = paged_kv.adaptive_core("car_adaptive", 2, pages)
+    st = jax.tree.map(lambda a: jnp.stack([a] * 4), core.init())
+    st, gh = paged_kv.replay_page_ids(st, "car_adaptive", pages, range(8))
+    assert st.blocks.shape == (4, 2, 1, 2 * pages)
+    assert np.asarray(gh).shape == (4, 2)
+    new_st, gh2 = paged_kv.reseed_from_ghosts(st, "car_adaptive", pages, 2, 2)
+    assert new_st.blocks.shape == (4, 2, 1, 2 * pages)
+    assert gh2.shape == (4, 2)

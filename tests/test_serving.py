@@ -222,18 +222,22 @@ def test_prefix_cache_accepts_prebuilt_policy_instance():
 
 
 def test_engine_telemetry_one_code_path(engine):
+    """Telemetry keys are namespaced by cache layer (``prefix/...``,
+    ``kv/...``, ``expert/...``) so two caches running the same policy never
+    collide in the merged dict."""
     engine.generate([Request(50, list(range(2, 18)), max_new_tokens=2)])
     t = engine.telemetry()
-    assert t["prefix_cache"]["policy"] == "awrp"
-    assert {"hits", "misses", "hit_ratio"} <= set(t["prefix_cache"])
+    assert t["prefix/cache"]["policy"] == "awrp"
+    assert {"hits", "misses", "hit_ratio"} <= set(t["prefix/cache"])
     assert t["engine"]["prefills"] >= 1
-    assert "expert_cache" not in t  # none attached on this config
-    rt = ExpertCacheRuntime(n_layers=1, capacity=2, policy="lru")
+    assert "expert/cache" not in t  # none attached on this config
+    rt = ExpertCacheRuntime(n_layers=1, capacity=2, policy="awrp")
     engine.expert_cache = rt
     rt.route(0, [5])
     t = engine.telemetry()
-    assert t["expert_cache"]["policy"] == "lru"
-    assert t["expert_cache"]["transfers"] == 1
+    # same policy name in two layers -> two distinct namespaced keys
+    assert t["expert/cache"]["policy"] == t["prefix/cache"]["policy"] == "awrp"
+    assert t["expert/cache"]["transfers"] == 1
 
 
 @pytest.mark.parametrize("kv_policy", ["arc_adaptive", "car_adaptive"])
@@ -248,4 +252,119 @@ def test_bounded_kv_true_adaptive_engine_runs_past_pool_capacity(kv_policy):
     eng = ServeEngine(cfg, params, max_len=128, kv_mode="paged")
     out = eng.generate([Request(0, list(range(1, 17)), max_new_tokens=40)])
     assert len(out[0].tokens) == 40  # decoded far past 3*8=24 resident tokens
-    assert eng.telemetry()["kv_pool"]["policy"] == kv_policy
+    assert eng.telemetry()["kv/pool"]["policy"] == kv_policy
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving (serve.tenancy, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _tenant_requests(n_good=6, n_hog=6):
+    """A loop-heavy tenant (repeats two prompts — should hit) interleaved
+    with a hog tenant (all-distinct prompts at quota 1 — pure thrash)."""
+    good_prompts = [list(range(1, 17)), list(range(30, 46))]
+    reqs = []
+    rid = 0
+    for i in range(max(n_good, n_hog)):
+        if i < n_good:
+            reqs.append(Request(rid, list(good_prompts[i % 2]),
+                                max_new_tokens=2, tenant_id="good"))
+            rid += 1
+        if i < n_hog:
+            reqs.append(Request(rid, [100 + 16 * i + j for j in range(16)],
+                                max_new_tokens=2, tenant_id="hog"))
+            rid += 1
+    return reqs
+
+
+def test_two_tenant_hit_ratios_match_host_oracles(engine):
+    """Acceptance (a): per-tenant hit ratios from ``ServeEngine.telemetry``
+    reproduce host oracles run on the demuxed per-tenant prompt streams —
+    the manager's row accounting is the oracle accounting."""
+    from repro.core.policies import make_policy
+    from repro.serve.tenancy import _prompt_key
+
+    quotas = {"good": 3, "hog": 1}
+    eng = ServeEngine(engine.cfg, engine.params, max_len=96, tenants=quotas)
+    reqs = _tenant_requests()
+    for r in reqs:  # one request per generate(): the prefix path engages
+        out = eng.generate([Request(r.rid, list(r.prompt),
+                                    max_new_tokens=r.max_new_tokens,
+                                    tenant_id=r.tenant_id)])
+        assert out[r.rid].status == "ok"
+    oracles = {t: make_policy("awrp", q) for t, q in quotas.items()}
+    expect = {t: [0, 0] for t in quotas}  # hits, accesses
+    for r in reqs:
+        hit = oracles[r.tenant_id].access(_prompt_key(eng._align(r.prompt)))
+        expect[r.tenant_id][0] += int(hit)
+        expect[r.tenant_id][1] += 1
+    t = eng.telemetry()
+    for tenant in quotas:
+        tel = t[f"prefix/{tenant}"]
+        assert tel["accesses"] == expect[tenant][1]
+        assert tel["hits"] == expect[tenant][0], (tenant, tel)
+        assert tel["hit_ratio"] == expect[tenant][0] / expect[tenant][1]
+    # the hog thrashes (quota 1, distinct prompts): pressure near 1
+    assert t["prefix/hog"]["pressure"] > 0.3
+    assert t["prefix/good"]["pressure"] < t["prefix/hog"]["pressure"]
+
+
+def test_admission_sheds_hog_without_perturbing_other_tenant(engine):
+    """Acceptance (b): under quota pressure the admission controller sheds
+    the pressured tenant; the other tenant's hit ratio is EXACTLY what it
+    would be alone (quota rows are independent policy instances — not just
+    'within noise')."""
+    from repro.serve.tenancy import AdmissionController
+
+    quotas = {"good": 3, "hog": 1}
+    # thresholds sized to the EWMA ramp (alpha 0.1): the hog's all-miss
+    # stream crosses 0.45 within ~7 evicting accesses
+    adm = AdmissionController(defer_at=0.3, shed_at=0.45, warmup=3)
+    eng = ServeEngine(engine.cfg, engine.params, max_len=96, tenants=quotas,
+                      admission=adm)
+    solo = ServeEngine(engine.cfg, engine.params, max_len=96,
+                       tenants={"good": 3})
+    statuses = {}
+    for r in _tenant_requests(n_good=5, n_hog=8):
+        out = eng.generate([Request(r.rid, list(r.prompt),
+                                    max_new_tokens=2,
+                                    tenant_id=r.tenant_id)])
+        statuses.setdefault(r.tenant_id, []).append(out[r.rid].status)
+        if r.tenant_id == "good":
+            solo.generate([Request(r.rid, list(r.prompt), max_new_tokens=2,
+                                   tenant_id="good")])
+    assert "shed" in statuses["hog"]  # pressure crossed shed_at
+    assert all(s == "ok" for s in statuses["good"])
+    both = eng.telemetry()["prefix/good"]
+    alone = solo.telemetry()["prefix/good"]
+    assert both["hits"] == alone["hits"]
+    assert both["hit_ratio"] == alone["hit_ratio"]
+    assert eng.stats["shed"] >= 1
+
+
+def test_ghost_hit_feed_adapts_p_under_prefix_reuse():
+    """Acceptance (c): in the true-adaptive paged mode, prefix-reuse traffic
+    (re-prefills of page positions the tenant's previous pool evicted)
+    replays ghost hits and demonstrably moves ``p`` — which pure decode
+    provably cannot (tests/test_adaptive_kv.py pins that side)."""
+    cfg = load_smoke_config("gemma3_27b")
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32",
+                              bounded_kv_pages=2, page_size=8,
+                              kv_policy="arc_adaptive")
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, max_len=256, kv_mode="paged",
+                      tenants={"a": 3})
+    rng = np.random.RandomState(0)
+    p_max = []
+    for i in range(3):
+        prompt = rng.randint(1, cfg.vocab, size=16).tolist()
+        out = eng.generate([Request(i, prompt, max_new_tokens=32,
+                                    tenant_id="a")])
+        assert len(out[i].tokens) == 32
+        states = eng._kv_sessions["a"]
+        p_max.append(max(float(np.asarray(s.p).max()) for s in states))
+    t = eng.telemetry()
+    assert t["kv/a"]["ghost_hits"] > 0  # the feed fired
+    assert eng.stats["kv_ghost_hits"] == t["kv/a"]["ghost_hits"]
+    assert max(p_max) > 0.0  # p moved (provably static in pure decode)
