@@ -32,7 +32,7 @@ import traceback
 #: precedes tenancy: both contribute to the --sweep-json artifact and
 #: tenancy merges into the record policy_overhead writes.
 SMOKE_SECTIONS = ("table1", "trace_suite", "policy_overhead", "tenancy",
-                  "kernel_bench")
+                  "serve_loop", "kernel_bench")
 
 
 def main(argv=None) -> None:
@@ -76,6 +76,7 @@ def main(argv=None) -> None:
         kernel_bench,
         policy_overhead,
         roofline_report,
+        serve_loop_bench,
         serve_policy_bench,
         serve_quality_bench,
         table1,
@@ -103,6 +104,9 @@ def main(argv=None) -> None:
         "tenancy": (
             "Multi-tenant tenancy (shared vs quota rows vs rebalancing)",
             tenancy_bench.run),
+        "serve_loop": (
+            "Fully-jitted serve loop vs host-orchestrated (DESIGN.md §9)",
+            serve_loop_bench.run),
         "expert_cache": ("Expert cache (MoE serving)", expert_cache_bench.run),
         "grad_compress": ("Gradient compression", grad_compress_bench.run),
         "roofline": ("Roofline report (from dry-run artifacts)",

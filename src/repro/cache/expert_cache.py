@@ -162,6 +162,7 @@ class ExpertCacheRuntime:
 
     @property
     def hit_ratio(self) -> float:
+        """Fraction of expert accesses served without an HBM transfer."""
         hits = self.accesses - self.transfers
         return hits / self.accesses if self.accesses else 0.0
 

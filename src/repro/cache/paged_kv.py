@@ -69,6 +69,11 @@ class PagedPool(NamedTuple):
 
 
 def init_pool(batch: int, pages: int, page_size: int, kvd: int, dtype) -> PagedPool:
+    """Concrete all-zeros pool (all pages free: ``page_start == -1``).
+
+    Pure constructor — allocates device arrays, mutates nothing.  The pool
+    itself is an immutable NamedTuple pytree: every update function below
+    returns a new pool, so it is safe to carry through jit/scan/donation."""
     return PagedPool(
         k=jnp.zeros((batch, pages, page_size, kvd), dtype),
         v=jnp.zeros((batch, pages, page_size, kvd), dtype),
@@ -81,6 +86,8 @@ def init_pool(batch: int, pages: int, page_size: int, kvd: int, dtype) -> PagedP
 
 
 def abstract_pool(batch: int, pages: int, page_size: int, kvd: int, dtype):
+    """``init_pool``'s shape/dtype skeleton (``jax.ShapeDtypeStruct`` leaves)
+    for ``jax.eval_shape`` / AOT tracing — allocates no device memory."""
     sds = jax.ShapeDtypeStruct
     return PagedPool(
         k=sds((batch, pages, page_size, kvd), dtype),
@@ -225,6 +232,8 @@ def adaptive_core(kv_policy: str, batch: int, pages: int) -> AdaptiveCore:
 def init_adaptive_pool(
     batch: int, pages: int, page_size: int, kvd: int, dtype, kv_policy: str
 ) -> AdaptivePagedPool:
+    """Concrete empty pool + freshly initialised ARC/CAR planes.  Pure
+    constructor; the result is an immutable pytree (see ``init_pool``)."""
     return AdaptivePagedPool(
         pool=init_pool(batch, pages, page_size, kvd, dtype),
         policy=adaptive_core(kv_policy, batch, pages).init(),
@@ -234,6 +243,8 @@ def init_adaptive_pool(
 def abstract_adaptive_pool(
     batch: int, pages: int, page_size: int, kvd: int, dtype, kv_policy: str
 ) -> AdaptivePagedPool:
+    """``init_adaptive_pool``'s shape/dtype skeleton for ``jax.eval_shape``
+    — no device allocation (see ``abstract_pool``)."""
     sds = jax.ShapeDtypeStruct
     L = 2 * pages
     return AdaptivePagedPool(
@@ -545,6 +556,8 @@ def full_cache_insert(
     new_v: jax.Array,
     pos: jax.Array,  # scalar int32
 ) -> Tuple[jax.Array, jax.Array]:
+    """Unbounded-cache baseline: write the token row at index ``pos``.
+    Functional update (returns new arrays); jit/scan-safe."""
     k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, new_k, pos, axis=1)
     v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, new_v, pos, axis=1)
     return k_cache, v_cache
@@ -557,6 +570,8 @@ def ring_insert(
     new_v: jax.Array,
     pos: jax.Array,
 ) -> Tuple[jax.Array, jax.Array]:
+    """Sliding-window baseline: write into ring slot ``pos % W`` (evicting
+    the token W steps back).  Functional update; jit/scan-safe."""
     W = k_cache.shape[1]
     slot = (pos % W).astype(jnp.int32)
     k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, new_k, slot, axis=1)

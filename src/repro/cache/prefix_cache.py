@@ -20,11 +20,20 @@ from repro.core.policy_core import make_cache_policy
 
 
 def prompt_key(tokens) -> int:
-    # non-negative: the slot-array policies use negative ids as "empty"
+    """Exact-match cache key for a token sequence (order-sensitive hash).
+    Non-negative: the slot-array policies use negative ids as "empty"."""
     return hash(tuple(int(t) for t in tokens)) & 0x7FFF_FFFF_FFFF_FFFF
 
 
 class PrefixCache:
+    """Single-tenant prompt -> decode-caches map with policy eviction.
+
+    Host-side mutable object (NOT jit-traceable — call it only from the
+    orchestration layer, never inside a compiled step).  Stored payloads
+    are device pytrees held by reference: under the donated-buffer serve
+    loop the engine snapshots payloads before insert/after hit so stored
+    entries never alias donated buffers (DESIGN.md §9)."""
+
     def __init__(self, capacity: int = 16, policy: str = "awrp"):
         # the unified serving factory (DESIGN.md §7): accepts a policy name
         # or a prebuilt ReplacementPolicy instance
@@ -34,6 +43,8 @@ class PrefixCache:
         self.misses = 0
 
     def lookup(self, tokens) -> Optional[Any]:
+        """Return the stored payload or None.  Mutates policy state and
+        hit/miss counters either way (a lookup is an access)."""
         key = prompt_key(tokens)
         if key in self.store:
             self.policy.access(key)  # hit: F += 1, R = clock
@@ -43,6 +54,8 @@ class PrefixCache:
         return None
 
     def insert(self, tokens, caches: Any) -> None:
+        """Store ``caches`` under the prompt's key, evicting per policy on
+        capacity (evicted entries' payloads are dropped from the store)."""
         key = prompt_key(tokens)
         if key in self.store:
             self.policy.access(key)
@@ -57,6 +70,7 @@ class PrefixCache:
 
     @property
     def hit_ratio(self) -> float:
+        """Lookup hit ratio since construction (0.0 before any lookup)."""
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
@@ -71,6 +85,8 @@ class PrefixCache:
         }
 
     def entry_bytes(self) -> int:
+        """Total device bytes held by stored payloads (accounting hook —
+        the production capacity unit; entries are the repro unit)."""
         return sum(
             sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(v))
             for v in self.store.values()

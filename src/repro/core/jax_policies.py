@@ -104,6 +104,8 @@ class CacheState(NamedTuple):
 
 
 def init_state(capacity: int) -> CacheState:
+    """Empty flat sweep-engine state for a (configs, sets, ways) grid —
+    kept for the pre-PR-3 call sites; new code uses ``policy_core.init``."""
     return CacheState(
         blocks=jnp.full((capacity,), -1, dtype=jnp.int32),
         f=jnp.zeros((capacity,), dtype=jnp.int32),

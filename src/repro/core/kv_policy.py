@@ -53,6 +53,8 @@ def page_victim(
     *,
     use_kernel: bool = False,
 ) -> jax.Array:
+    """Advisory next-victim page for each row of the paged-KV pool state
+    (the pool's eviction rule; pure, jit-safe)."""
     valid = (page_start >= 0) & ~pinned
     if policy == "awrp":
         return awrp_victim_rows(f, r, clock, valid, use_kernel=use_kernel)

@@ -1,8 +1,9 @@
 """Reference (host-side, numpy/pure-python) cache replacement policies.
 
-These are the *oracles* for the whole framework: the JAX / Pallas
-implementations in ``jax_policies.py`` and ``repro.kernels`` are validated
-against the decisions made here.
+These are the *oracles* for the whole framework: the device implementations
+— the unified policy core in ``policy_core.py`` (which ``jax_policies.py``,
+the paged-KV pool and the serving caches all drive) and the Pallas kernels
+in ``repro.kernels`` — are validated against the decisions made here.
 
 Every policy implements the same tiny protocol::
 
@@ -67,11 +68,14 @@ class ReplacementPolicy:
 
     # -- protocol ---------------------------------------------------------
     def access(self, block: int) -> bool:
+        """Touch ``block``; True on hit.  Subclasses implement the policy
+        (mutates residency/metadata and the hit/access counters)."""
         raise NotImplementedError
 
     # -- stats ------------------------------------------------------------
     @property
     def hit_ratio(self) -> float:
+        """hits / accesses (0.0 before any access)."""
         return self.hits / self.accesses if self.accesses else 0.0
 
     def _count(self, hit: bool) -> bool:
@@ -81,6 +85,7 @@ class ReplacementPolicy:
 
     # -- introspection (used by tests) -------------------------------------
     def resident_set(self) -> set:
+        """Set of resident block ids (test/introspection hook; read-only)."""
         raise NotImplementedError
 
 
@@ -142,6 +147,8 @@ class AWRP(ReplacementPolicy):
         return int(np.argmin(w))
 
     def access(self, block: int) -> bool:
+        """Paper §3 rule: a hit bumps F and refreshes R; a miss inserts
+        into a free slot or the lazy argmin-W victim (eq. (1))."""
         self.clock += 1
         slot = self._index.get(block)
         if slot is not None:  # HIT
@@ -167,6 +174,7 @@ class AWRP(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids (occupied slots)."""
         return set(int(b) for b in self.blocks if b >= 0)
 
 
@@ -186,6 +194,7 @@ class WRP(AWRP):
 
 
 class LRU(ReplacementPolicy):
+    """Least-recently-used: hit refreshes recency, miss evicts the LRU."""
     name = "lru"
 
     def __init__(self, capacity: int):
@@ -193,6 +202,7 @@ class LRU(ReplacementPolicy):
         self.od: "OrderedDict[int, None]" = OrderedDict()
 
     def access(self, block: int) -> bool:
+        """Hit moves ``block`` to MRU; miss evicts the LRU entry when full."""
         if block in self.od:
             self.od.move_to_end(block)
             return self._count(True)
@@ -202,10 +212,12 @@ class LRU(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids."""
         return set(self.od)
 
 
 class FIFO(ReplacementPolicy):
+    """First-in-first-out: eviction in insertion order, hits never reorder."""
     name = "fifo"
 
     def __init__(self, capacity: int):
@@ -214,6 +226,7 @@ class FIFO(ReplacementPolicy):
         self.s: set = set()
 
     def access(self, block: int) -> bool:
+        """Hit leaves the queue untouched; miss evicts the oldest insert."""
         if block in self.s:
             return self._count(True)
         if len(self.q) >= self.capacity:
@@ -223,6 +236,7 @@ class FIFO(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids."""
         return set(self.s)
 
 
@@ -238,6 +252,7 @@ class LFU(ReplacementPolicy):
         self.clock = 0
 
     def access(self, block: int) -> bool:
+        """Hit bumps the frequency; miss evicts min (freq, recency) when full."""
         self.clock += 1
         if block in self.freq:
             self.freq[block] += 1
@@ -252,10 +267,12 @@ class LFU(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids."""
         return set(self.freq)
 
 
 class RANDOM(ReplacementPolicy):
+    """Uniform-random eviction (seeded) — the no-information baseline."""
     name = "random"
 
     def __init__(self, capacity: int, seed: int = 0):
@@ -265,6 +282,7 @@ class RANDOM(ReplacementPolicy):
         self.s: set = set()
 
     def access(self, block: int) -> bool:
+        """Hit is a no-op; miss overwrites a uniformly chosen resident when full."""
         if block in self.s:
             return self._count(True)
         if len(self.items) >= self.capacity:
@@ -277,6 +295,7 @@ class RANDOM(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids."""
         return set(self.s)
 
 
@@ -314,6 +333,8 @@ class ARC(ReplacementPolicy):
             self.B2[lru] = None
 
     def access(self, block: int) -> bool:
+        """ARC's four cases (T1/T2 hit, B1/B2 ghost hit, cold miss) with the
+        float32 ``p`` adaptation — op order matches the device engine."""
         c = self.capacity
         if block in self.T1:
             del self.T1[block]
@@ -354,6 +375,7 @@ class ARC(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids: T1 ∪ T2 (ghosts B1/B2 excluded)."""
         return set(self.T1) | set(self.T2)
 
 
@@ -427,6 +449,8 @@ class CAR(ReplacementPolicy):
                 self.T2.rotate_head_to_tail()
 
     def access(self, block: int) -> bool:
+        """CAR's clock variant of the ARC cases; ref bits instead of strict LRU,
+        same float32 ``p`` discipline as the device engine."""
         c = self.capacity
         if block in self.T1:
             self.T1.ref[block] = True
@@ -463,6 +487,7 @@ class CAR(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids: T1 ∪ T2 clocks (ghosts excluded)."""
         return set(self.T1.ref) | set(self.T2.ref)
 
 
@@ -472,6 +497,8 @@ class CAR(ReplacementPolicy):
 
 
 class TwoQ(ReplacementPolicy):
+    """2Q [Johnson & Shasha, VLDB'94]: A1in FIFO probation, A1out ghost
+    queue, Am LRU for proven-hot pages."""
     name = "2q"
 
     def __init__(self, capacity: int):
@@ -496,6 +523,8 @@ class TwoQ(ReplacementPolicy):
             self.am.popitem(last=False)
 
     def access(self, block: int) -> bool:
+        """2Q rule: Am hit refreshes LRU, A1in hit stays put, A1out ghost hit
+        promotes to Am, cold miss enters A1in probation."""
         if block in self.am:
             self.am.move_to_end(block)
             return self._count(True)
@@ -512,6 +541,7 @@ class TwoQ(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids: A1in ∪ Am (A1out is a ghost list)."""
         return self.a1in_set | set(self.am)
 
 
@@ -534,11 +564,15 @@ class OPT(ReplacementPolicy):
         self.resident: set = set()
 
     def prepare(self, trace) -> None:
+        """Index the full future trace (next-use positions) — must be called
+        before replaying the same trace through ``access``."""
         self.next_use = {}
         for i, b in enumerate(trace):
             self.next_use.setdefault(int(b), deque()).append(i)
 
     def access(self, block: int) -> bool:
+        """Belady's rule: on a full miss, evict the resident whose next use is
+        farthest in the future (requires ``prepare``)."""
         block = int(block)
         q = self.next_use.get(block)
         if q and q and q[0] == self.t:
@@ -562,6 +596,7 @@ class OPT(ReplacementPolicy):
         return self._count(False)
 
     def resident_set(self) -> set:
+        """Resident block ids."""
         return set(self.resident)
 
 
@@ -576,6 +611,9 @@ POLICIES = {
 
 
 def make_policy(name: str, capacity: int, **kw) -> ReplacementPolicy:
+    """Factory: policy ``name`` → fresh instance at ``capacity`` (extra
+    kwargs forwarded, e.g. AWRP's alpha/beta).  Raises ValueError on
+    unknown names."""
     try:
         return POLICIES[name](capacity, **kw)
     except KeyError:
@@ -624,6 +662,9 @@ class AAWRP(AWRP):
         return int(np.argmin(np.where(occ, w, np.float32(np.inf))))
 
     def access(self, block: int) -> bool:
+        """AWRP access plus ghost-directed (alpha, beta) ladder moves: a ghost
+        hit on the frequency (recency) side steps the exponents toward the
+        lean that would have kept the block."""
         if block not in self._index:
             if block in self.ghost_f:
                 del self.ghost_f[block]

@@ -64,6 +64,11 @@ __all__ = [
     "AdaptiveState",
     "PolicyState",
     "RowCounters",
+    "ADMIT_ACCEPT",
+    "ADMIT_DEFER",
+    "ADMIT_SHED",
+    "admission_decide",
+    "admission_decay",
     "FlatCore",
     "AdaptiveCore",
     "PolicyCore",
@@ -301,6 +306,8 @@ PolicyState = Union[FlatState, AdaptiveState]
 
 
 def init_adaptive_state(batch: int, num_sets: int, lanes: int) -> AdaptiveState:
+    """Empty ``AdaptiveState`` for ``rows x num_sets`` ARC/CAR instances with
+    per-row capacities ``caps`` (L = 2*max(caps) lanes; dead lanes masked)."""
     return AdaptiveState(
         blocks=jnp.full((batch, num_sets, lanes), -1, dtype=jnp.int32),
         tag=jnp.zeros((batch, num_sets, lanes), dtype=jnp.int32),
@@ -568,18 +575,26 @@ def _renorm_stamps(state: AdaptiveState, renorm_at: int) -> AdaptiveState:
 
 
 class RowCounters(NamedTuple):
-    """Per-row cumulative accounting — ``(rows,)`` int32 device arrays.
+    """Per-row cumulative accounting — ``(rows,)`` device arrays.
 
     Carried OUTSIDE the policy state pytrees on purpose: `FlatState` /
     `AdaptiveState` layouts are scan carries in the sweep engine and the
     paged-KV pool, and growing them would change every consumer's pytree
     structure (and its XLA in-place-carry behaviour).  Accounting callers —
     the tenancy manager, benchmarks — thread a `RowCounters` alongside the
-    state through ``on_access_counted``."""
+    state through ``on_access_counted``.
+
+    ``pressure`` is the admission plane (DESIGN.md §9): a per-row EWMA of
+    evictions-per-access, updated in the same jitted step as the access
+    itself so the admission signal never lags the state it describes.  It
+    is the single source of truth — host mirrors are pulled copies, never
+    recomputed (XLA's FMA contraction makes a host float32 replay of the
+    same recurrence diverge by ~1 ulp within a handful of steps)."""
 
     hits: jax.Array  # (rows,) int32
     misses: jax.Array  # (rows,) int32
     evictions: jax.Array  # (rows,) int32
+    pressure: jax.Array  # (rows,) float32 EWMA of evictions/access
 
 
 class _Accounting:
@@ -594,8 +609,11 @@ class _Accounting:
     on a hit and every miss inserts."""
 
     def init_counters(self) -> RowCounters:
+        """Fresh all-zero counters for this core's ``rows`` (device arrays);
+        pure — allocates new arrays, mutates nothing."""
         z = jnp.zeros((self.rows,), dtype=jnp.int32)
-        return RowCounters(hits=z, misses=z, evictions=z)
+        p = jnp.zeros((self.rows,), dtype=jnp.float32)
+        return RowCounters(hits=z, misses=z, evictions=z, pressure=p)
 
     def on_access_counted(
         self,
@@ -604,8 +622,15 @@ class _Accounting:
         ids: jax.Array,
         *,
         active: jax.Array | None = None,
+        pressure_alpha: float = 0.1,
     ) -> Tuple["PolicyState", RowCounters, jax.Array]:
-        """``on_access`` + per-row hit/miss/eviction accounting."""
+        """``on_access`` + per-row hit/miss/eviction accounting and the
+        admission pressure EWMA.
+
+        Active rows fold this access's eviction count into ``pressure`` as
+        ``(1 - alpha) * p + alpha * evicted``; inactive rows keep their
+        pressure (and all other counters) untouched.  Pure and jit-safe:
+        returns new state/counters, mutates nothing."""
         occ_b = self.occupancy(state)
         new_state, hit = self.on_access(state, ids, active=active)
         occ_a = self.occupancy(new_state)
@@ -616,10 +641,13 @@ class _Accounting:
         )
         miss = act & ~hit
         evicted = jnp.where(miss, occ_b + 1 - occ_a, 0).astype(jnp.int32)
+        a = jnp.float32(pressure_alpha)
+        p_new = (1.0 - a) * counters.pressure + a * evicted.astype(jnp.float32)
         new_counters = RowCounters(
             hits=counters.hits + hit.astype(jnp.int32),
             misses=counters.misses + miss.astype(jnp.int32),
             evictions=counters.evictions + evicted,
+            pressure=jnp.where(act, p_new, counters.pressure),
         )
         return new_state, new_counters, hit
 
@@ -637,7 +665,68 @@ class _Accounting:
             "accesses": counters.hits + counters.misses,
             "occupancy": self.occupancy(state),
             "capacity": jnp.asarray(self.row_capacity, dtype=jnp.int32),
+            "pressure": counters.pressure,
         }
+
+
+#: admission decision codes — the device encoding of the host controller's
+#: ``"accept"/"defer"/"shed"`` strings.  Stable int32 values: they appear in
+#: jitted programs and in the serve-loop bench's recorded decisions.
+ADMIT_ACCEPT = 0
+ADMIT_DEFER = 1
+ADMIT_SHED = 2
+
+
+def admission_decide(
+    pressure: jax.Array,
+    accesses: jax.Array,
+    *,
+    defer_at: float,
+    shed_at: float,
+    warmup: int,
+) -> jax.Array:
+    """Pure device admission decision over per-row planes (DESIGN.md §9).
+
+    Mirrors ``AdmissionController.decide`` exactly: rows still inside the
+    warmup window (``accesses < warmup``) always ACCEPT; otherwise SHED when
+    ``pressure >= shed_at``, DEFER when ``pressure >= defer_at``, else
+    ACCEPT.  Comparisons run on the device float32 pressure plane, so host
+    and device agree bit-for-bit when the host reads a pulled mirror.
+
+    Args:
+      pressure: ``(rows,)`` float32 eviction-rate EWMA
+        (``RowCounters.pressure``).
+      accesses: ``(rows,)`` int32 cumulative accesses (hits + misses).
+      defer_at/shed_at/warmup: static thresholds (baked into the jitted
+        program).
+
+    Returns:
+      ``(rows,)`` int32 of ``ADMIT_ACCEPT`` / ``ADMIT_DEFER`` /
+      ``ADMIT_SHED``.  Pure and jit-safe."""
+    code = jnp.where(
+        pressure >= jnp.float32(shed_at),
+        jnp.int32(ADMIT_SHED),
+        jnp.where(
+            pressure >= jnp.float32(defer_at),
+            jnp.int32(ADMIT_DEFER),
+            jnp.int32(ADMIT_ACCEPT),
+        ),
+    )
+    return jnp.where(accesses < jnp.int32(warmup), jnp.int32(ADMIT_ACCEPT), code)
+
+
+def admission_decay(
+    pressure: jax.Array, mask: jax.Array, alpha: float
+) -> jax.Array:
+    """Probation decay after a shed: rows where ``mask`` is True scale their
+    pressure by ``1 - alpha`` (the same fold a zero-eviction access would
+    apply), so a shed tenant re-enters service after sustained calm instead
+    of being locked out at its peak EWMA.  Pure and jit-safe; rows outside
+    ``mask`` are untouched."""
+    a = jnp.float32(alpha)
+    return jnp.where(
+        jnp.asarray(mask, dtype=bool), pressure * (1.0 - a), pressure
+    )
 
 
 def _select_state(active, new_state, old_state):
@@ -679,10 +768,12 @@ class FlatCore(_Accounting):
 
     @property
     def rows(self) -> int:
+        """Number of independent policy rows (the free batch axis)."""
         return len(self.pids)
 
     @property
     def W(self) -> int:
+        """Padded lane count of the ways axis (``lanes`` or max(ways))."""
         return self.lanes if self.lanes is not None else max(self.ways)
 
     @property
@@ -704,6 +795,7 @@ class FlatCore(_Accounting):
         return jnp.sum(occ & live[:, None, :], axis=(-2, -1), dtype=jnp.int32)
 
     def init(self) -> FlatState:
+        """Fresh empty ``FlatState`` for this spec (pure; new arrays)."""
         B, S, W = self.rows, self.num_sets, self.W
         shape = (B, W) if S == 1 else (B, S, W)
         return FlatState(
@@ -816,13 +908,17 @@ class AdaptiveCore(_Accounting):
 
     @property
     def rows(self) -> int:
+        """Number of independent policy rows (the free batch axis)."""
         return len(self.caps)
 
     @property
     def L(self) -> int:
+        """Lane count of the tag/stamp/ref planes: 2*max(caps) — residents
+        plus ghosts."""
         return self.lanes if self.lanes is not None else 2 * max(self.caps)
 
     def init(self) -> AdaptiveState:
+        """Fresh empty ``AdaptiveState`` for this spec (pure; new arrays)."""
         return init_adaptive_state(self.rows, self.num_sets, self.L)
 
     def on_access(

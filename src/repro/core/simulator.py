@@ -35,6 +35,8 @@ __all__ = ["SimResult", "simulate", "sweep", "hit_ratio_table"]
 
 @dataclasses.dataclass
 class SimResult:
+    """One (policy, capacity, trace) replay outcome: counts plus the
+    resident set at end of trace."""
     policy: str
     capacity: int
     num_sets: int
@@ -43,10 +45,12 @@ class SimResult:
 
     @property
     def hit_ratio(self) -> float:
+        """hits / accesses (0.0 on an empty trace)."""
         return self.hits / self.accesses if self.accesses else 0.0
 
     @property
     def miss_ratio(self) -> float:
+        """1 - hit_ratio."""
         return 1.0 - self.hit_ratio
 
 

@@ -135,6 +135,8 @@ def trace_hashjoin(
 def trace_zipf(
     n_accesses: int = 10_000, n_blocks: int = 1_000, alpha: float = 0.8, seed: int = 0
 ) -> np.ndarray:
+    """Zipf(alpha)-distributed accesses over ``universe`` blocks — the
+    skewed-popularity workload (alpha=0 degenerates to uniform)."""
     rng = np.random.RandomState(seed)
     ranks = np.arange(1, n_blocks + 1, dtype=np.float64)
     p = ranks ** (-alpha)

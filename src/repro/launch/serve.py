@@ -45,6 +45,10 @@ def main():
     ap.add_argument("--auto-rebalance", action="store_true",
                     help="move quota lanes to pressured tenants from the "
                     "coldest (AWRP tenant ranking)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="use the host-orchestrated per-step decode loop "
+                    "instead of the default fully-jitted donated-buffer "
+                    "loop (DESIGN.md §9) — the serve_loop bench baseline")
     args = ap.parse_args()
 
     tenants = None
@@ -59,7 +63,8 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServeEngine(cfg, params, max_len=args.max_len,
                          kv_mode=args.kv_mode, tenants=tenants,
-                         auto_rebalance=args.auto_rebalance)
+                         auto_rebalance=args.auto_rebalance,
+                         jit_loop=not args.host_loop)
 
     rng = np.random.RandomState(0)
     names = list(tenants) if tenants else ["default"]
@@ -84,7 +89,9 @@ def main():
             results.update(engine.generate([r]))
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in results.values())
-    print(f"arch={cfg.name} kv_mode={args.kv_mode} policy={args.kv_policy}")
+    loop = "host" if args.host_loop else "jit"
+    print(f"arch={cfg.name} kv_mode={args.kv_mode} policy={args.kv_policy} "
+          f"loop={loop}")
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s host-side)")
     tel = engine.telemetry()

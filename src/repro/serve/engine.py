@@ -24,12 +24,20 @@ configs; the same jitted functions are what the dry-run lowers for the
   * per-policy telemetry from one code path: every cache the engine holds
     is built through the unified policy factory and reports a uniform
     ``telemetry()`` dict under a namespaced key (``prefix/...``,
-    ``kv/...``, ``expert/...``) — see ``ServeEngine.telemetry``.
+    ``kv/...``, ``expert/...``) — see ``ServeEngine.telemetry``;
+  * fully-jitted decode loop: by default the whole decode loop (decode
+    step + sampling + PRNG chain) is ONE jitted program per (steps,
+    temperature) with the KV caches and PRNG key donated in
+    (``donate_argnums`` — XLA reuses the buffers in place), and
+    multi-tenant admission runs as one jitted batch scan on the device
+    pressure plane; ``jit_loop=False`` restores the host-orchestrated
+    per-step loop (the measured baseline) — DESIGN.md §9.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional
 
@@ -52,6 +60,11 @@ from repro.serve.tenancy import (
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: ``prompt`` token ids (page-aligned by the
+    engine), a per-request decode budget and sampling temperature, and the
+    ``tenant_id`` admission/quota accounting charges it to (ignored by
+    single-tenant engines)."""
+
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
@@ -61,11 +74,17 @@ class Request:
 
 @dataclasses.dataclass
 class Result:
+    """Outcome of one request.  ``status`` is the admission trajectory:
+    ``"ok"`` ran in the first pass, ``"deferred"`` was pushed behind the
+    unpressured work but completed (tokens and telemetry identical to an
+    ``"ok"`` run of the same stream), ``"shed"`` was refused — no tokens,
+    and NO cache or tenancy state was touched on its behalf."""
+
     rid: int
     tokens: List[int]
     prefill_cached: bool
     latency_s: float
-    status: str = "ok"  # "ok" | "shed"
+    status: str = "ok"  # "ok" | "deferred" | "shed"
 
 
 def _is_apool(x) -> bool:
@@ -73,12 +92,35 @@ def _is_apool(x) -> bool:
 
 
 class ServeEngine:
+    """Continuous-batching serving engine over AWRP-managed caches.
+
+    Two decode-loop modes (DESIGN.md §9):
+
+    * ``jit_loop=True`` (default) — ONE jitted program per (steps,
+      temperature) runs the whole decode loop on device (``lax.scan`` of
+      decode+sample), with the KV caches and the PRNG key DONATED into it
+      (``jax.jit(..., donate_argnums=...)``): XLA reuses the cache buffers
+      in place, and host code only marshals inputs/outputs.  Admission for
+      multi-tenant engines runs as one jitted batch scan
+      (``AdmissionController.decide_batch``) on the device pressure plane.
+    * ``jit_loop=False`` — the host-orchestrated per-step loop (one jitted
+      decode step per token, sampling and admission on host).  Kept as the
+      measured baseline for ``benchmarks/serve_loop_bench.py``; token
+      streams across the two modes agree in sampling LOGIC but are not
+      asserted bit-identical (scan-compiled vs per-call numerics).
+
+    State mutated per ``generate`` call: ``self.key`` (PRNG chain),
+    ``self.stats``, the prefix/tenant caches, and (true-adaptive paged
+    mode) the per-tenant KV ghost sessions.  Donation means a stored
+    prefix payload is never aliased with loop buffers — payloads are
+    snapshotted on insert and on hit (see ``_run_bucket``)."""
+
     def __init__(self, cfg, params, *, max_len: int = 512,
                  kv_mode: str = "full", prefix_cache_entries: int = 8,
                  prefix_policy: str = "awrp", expert_cache=None, seed: int = 0,
                  tenants: Optional[Dict[str, int]] = None,
                  admission: Optional[AdmissionController] = None,
-                 auto_rebalance: bool = False):
+                 auto_rebalance: bool = False, jit_loop: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -98,12 +140,15 @@ class ServeEngine:
         #: optional ExpertCacheRuntime the model's MoE router reports into
         self.expert_cache = expert_cache
         self.key = jax.random.PRNGKey(seed)
+        self.jit_loop = bool(jit_loop)
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, max_len=max_len, kv_mode=kv_mode)
         )
         self._decode = jax.jit(
             lambda p, t, c: M.decode_step(p, cfg, t, c, kv_mode=kv_mode)
         )
+        #: jitted whole-decode-loop programs, one per (steps, temperature)
+        self._loops: Dict[tuple, object] = {}
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
                       "shed": 0, "deferred": 0, "kv_ghost_hits": 0,
                       "rebalances": 0}
@@ -139,6 +184,48 @@ class ServeEngine:
         logits, caches = self._prefill(self.params, batch)
         self.stats["prefills"] += 1
         return logits, caches
+
+    # -- the jitted decode loop (DESIGN.md §9) ------------------------------
+    def _get_loop(self, steps: int, temperature: float):
+        """The fused decode-loop program for this (steps, temperature):
+        greedy first token from the prefill logits, then ``steps - 1``
+        scanned decode+sample iterations.  ``caches`` and ``key`` are
+        DONATED — the caller must treat the passed-in values as consumed
+        and use only the returned ones (stored prefix payloads are
+        snapshotted around this, see ``_run_bucket``).  ``temperature`` is
+        baked in at trace time because ``sample`` branches on it in
+        Python."""
+        k = (int(steps), float(temperature))
+        loop = self._loops.get(k)
+        if loop is None:
+            loop = self._build_loop(int(steps), float(temperature))
+            self._loops[k] = loop
+        return loop
+
+    def _build_loop(self, steps: int, temperature: float):
+        cfg, kv_mode = self.cfg, self.kv_mode
+
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def loop(params, logits, caches, key):
+            toks = sample(logits[:, -1:], key, temperature=0.0,
+                          vocab=cfg.vocab)
+
+            def body(carry, _):
+                t, c, k = carry
+                k, sub = jax.random.split(k)
+                lg, c = M.decode_step(params, cfg, t, c, kv_mode=kv_mode)
+                t = sample(lg, sub, temperature=temperature, vocab=cfg.vocab)
+                return (t, c, k), t
+
+            (_, caches, key), ys = jax.lax.scan(
+                body, (toks, caches, key), None, length=steps - 1
+            )
+            # ys: (steps-1, B, 1) -> (B, steps-1); prepend the first token
+            gen = jnp.concatenate([toks, jnp.moveaxis(ys[..., 0], 0, 1)],
+                                  axis=1)
+            return gen, caches, key
+
+        return loop
 
     # -- ghost-hit feed (true-adaptive paged KV, DESIGN.md §8) --------------
     @property
@@ -212,12 +299,35 @@ class ServeEngine:
             out["expert/cache"] = self.expert_cache.telemetry()
         return out
 
+    def _admit(self, requests: List[Request]) -> List[str]:
+        """Admission decisions for ``requests`` in order, with the
+        decay-on-shed probation credit applied.  ``jit_loop`` engines run
+        one jitted device scan (``decide_batch`` — decides AND decays);
+        host engines run the per-request host loop.  Both paths are
+        bit-identical on identical streams (the parity property test)."""
+        mgr = self.tenant_cache.manager
+        if self.jit_loop:
+            return self.admission.decide_batch(
+                mgr, [r.tenant_id for r in requests])
+        decisions = []
+        for r in requests:
+            d = self.admission.decide(mgr, r.tenant_id)
+            if d == SHED:
+                # refused work is probation time: decay the EWMA so a
+                # shed tenant can re-enter once its burst has passed
+                mgr.decay_pressure(r.tenant_id)
+            decisions.append(d)
+        return decisions
+
     def generate(self, requests: List[Request]) -> Dict[int, Result]:
         """Length-bucketed batched generation.  Multi-tenant engines run an
         admission pass first: shed requests return immediately with
-        ``status="shed"``; deferred requests run after the unpressured
-        work (and are shed only if their tenant is still at shed pressure
-        by then)."""
+        ``status="shed"`` and leave every cache and tenancy counter
+        untouched; deferred requests run after the unpressured work (shed
+        only if their tenant is still at shed pressure by then, otherwise
+        completed with ``status="deferred"`` and the exact telemetry an
+        accepted run would have produced).  Mutates engine state (PRNG
+        chain, stats, caches) — see the class docstring."""
         out: Dict[int, Result] = {}
         for r in requests:
             r.prompt = self._align(r.prompt)
@@ -226,14 +336,9 @@ class ServeEngine:
             phases = [list(requests)]
         else:
             accepted, deferred = [], []
-            for r in requests:
-                decision = self.admission.decide(
-                    self.tenant_cache.manager, r.tenant_id)
+            for r, decision in zip(requests, self._admit(requests)):
                 if decision == SHED:
                     self.stats["shed"] += 1
-                    # refused work is probation time: decay the EWMA so a
-                    # shed tenant can re-enter once its burst has passed
-                    self.tenant_cache.manager.decay_pressure(r.tenant_id)
                     out[r.rid] = Result(rid=r.rid, tokens=[],
                                         prefill_cached=False, latency_s=0.0,
                                         status="shed")
@@ -245,14 +350,12 @@ class ServeEngine:
             phases = [accepted, deferred]
 
         for phase_i, phase in enumerate(phases):
-            if phase_i == 1:  # deferred retry: shed only if still critical
+            if phase_i == 1 and phase:
+                # deferred retry: shed only if still critical
                 kept = []
-                for r in phase:
-                    if (self.admission.decide(self.tenant_cache.manager,
-                                              r.tenant_id) == SHED):
+                for r, decision in zip(phase, self._admit(phase)):
+                    if decision == SHED:
                         self.stats["shed"] += 1
-                        # same probation credit as a first-pass shed
-                        self.tenant_cache.manager.decay_pressure(r.tenant_id)
                         out[r.rid] = Result(rid=r.rid, tokens=[],
                                             prefill_cached=False,
                                             latency_s=0.0, status="shed")
@@ -263,7 +366,13 @@ class ServeEngine:
             for r in phase:
                 buckets.setdefault(len(r.prompt), []).append(r)
             for plen, reqs in sorted(buckets.items()):
-                out.update(self._run_bucket(plen, reqs))
+                res = self._run_bucket(plen, reqs)
+                if phase_i == 1:
+                    # deferred-then-completed: same run, same counters —
+                    # only the status records the admission trajectory
+                    for v in res.values():
+                        v.status = "deferred"
+                out.update(res)
         return out
 
     def _maybe_rebalance(self, tenant: str) -> None:
@@ -296,6 +405,15 @@ class ServeEngine:
             self.tenant_cache.insert(req.tenant_id, req.prompt, payload)
             self._maybe_rebalance(req.tenant_id)
 
+    @staticmethod
+    def _snapshot(caches):
+        """Deep copy of a cache pytree.  Donation makes this load-bearing:
+        a stored prefix payload aliased with loop buffers would be
+        invalidated the first time the loop consumed it, so payloads are
+        snapshotted both on insert (the live caches continue into the
+        donated loop) and on hit (an entry can be hit again)."""
+        return jax.tree.map(jnp.array, caches)
+
     def _run_bucket(self, plen: int, reqs: List[Request]) -> Dict[int, Result]:
         t0 = time.time()
         prompts = [r.prompt for r in reqs]
@@ -307,6 +425,8 @@ class ServeEngine:
             cached = self._lookup_prefix(reqs[0])
         if cached is not None:
             logits, caches = cached
+            if self.jit_loop:
+                caches = self._snapshot(caches)  # loop will consume them
             was_cached = True
         else:
             logits, caches = self._batch_prefill(prompts)
@@ -316,22 +436,33 @@ class ServeEngine:
                     # prefix miss -> this prefill re-references page
                     # positions the tenant's previous pool may have evicted
                     caches = self._kv_reseed(caches, reqs[0].tenant_id, plen)
-                self._insert_prefix(reqs[0], (logits, caches))
+                payload = (
+                    (logits, self._snapshot(caches)) if self.jit_loop
+                    else (logits, caches)
+                )
+                self._insert_prefix(reqs[0], payload)
 
-        toks = sample(logits[:, -1:], self.key, temperature=0.0,
-                      vocab=self.cfg.vocab)
-        generated = [toks]
-        for step in range(max_new - 1):
-            self.key, sub = jax.random.split(self.key)
-            logits, caches = self._decode(self.params, toks, caches)
-            toks = sample(logits, sub,
-                          temperature=reqs[0].temperature,
+        if self.jit_loop:
+            loop = self._get_loop(max_new, reqs[0].temperature)
+            gen_dev, caches, self.key = loop(
+                self.params, logits, caches, self.key)
+            self.stats["decode_steps"] += max_new - 1
+            gen = np.asarray(gen_dev)
+        else:
+            toks = sample(logits[:, -1:], self.key, temperature=0.0,
                           vocab=self.cfg.vocab)
-            generated.append(toks)
-            self.stats["decode_steps"] += 1
+            generated = [toks]
+            for step in range(max_new - 1):
+                self.key, sub = jax.random.split(self.key)
+                logits, caches = self._decode(self.params, toks, caches)
+                toks = sample(logits, sub,
+                              temperature=reqs[0].temperature,
+                              vocab=self.cfg.vocab)
+                generated.append(toks)
+                self.stats["decode_steps"] += 1
+            gen = np.concatenate([np.asarray(t) for t in generated], axis=1)
         if single and self._ghost_feed_on:
             self._kv_persist(caches, reqs[0].tenant_id)
-        gen = np.concatenate([np.asarray(t) for t in generated], axis=1)
         dt = time.time() - t0
         self.stats["tokens"] += gen.size
         return {

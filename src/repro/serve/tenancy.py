@@ -20,7 +20,11 @@ Three layers:
   weight) donates quota lanes first, exactly the rule AWRP applies to
   cache lines.
 * ``AdmissionController`` — maps the pressure signal to accept / defer /
-  shed decisions for the serving engine.
+  shed decisions for the serving engine.  Decisions can run per request on
+  host (``decide``) or as one jitted scan over a whole request batch on
+  device (``decide_batch``) — bit-identical by construction, because the
+  pressure EWMA lives in the core's ``RowCounters.pressure`` plane
+  (DESIGN.md §9) and the host only ever reads pulled copies of it.
 * ``TenantPrefixCache`` — the prefix cache on top of the manager: one
   payload store per tenant, policy residency and store contents coherent
   per row (the same invariant ``PrefixCache`` keeps for one tenant).
@@ -37,6 +41,7 @@ the manager with the quotas you mean to keep.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -45,11 +50,14 @@ import numpy as np
 
 from repro.core.policy_core import (
     ADAPTIVE_POLICIES,
+    ADMIT_SHED,
     JAX_POLICIES,
     POLICY_IDS,
     AdaptiveCore,
     FlatCore,
     RowCounters,
+    admission_decay,
+    admission_decide,
 )
 
 __all__ = [
@@ -90,7 +98,12 @@ class TenantCacheManager:
         self.policy_name = policy
         self.quotas = {t: int(q) for t, q in quotas.items()}
         self.pressure_alpha = float(pressure_alpha)
-        self._pressure = np.zeros(len(self.tenants), dtype=np.float64)
+        # host mirror of the device pressure plane (RowCounters.pressure).
+        # Always a PULLED writable copy, never recomputed host-side: XLA's
+        # FMA contraction makes a host float32 replay of the EWMA diverge
+        # within a few steps, and admission bit-identity (host decide vs
+        # device decide_batch) depends on both reading the same bits.
+        self._pressure = np.zeros(len(self.tenants), dtype=np.float32)
         # tenant-altitude AWRP metadata for ranking: F_t / R_t / clock N
         self._tf = np.zeros(len(self.tenants), dtype=np.int64)
         self._tr = np.zeros(len(self.tenants), dtype=np.int64)
@@ -103,10 +116,12 @@ class TenantCacheManager:
     # -- core mount ---------------------------------------------------------
     @property
     def rows(self) -> int:
+        """Number of core rows == number of tenants (static per manager)."""
         return len(self.tenants)
 
     @property
     def is_adaptive(self) -> bool:
+        """True for arc/car mounts (ghost directories, fixed quotas)."""
         return self.policy_name in ADAPTIVE_POLICIES
 
     def _build_core(self):
@@ -127,15 +142,22 @@ class TenantCacheManager:
     def _jit_step(self):
         """One jitted masked step for the host `access` path (the eager
         adaptive step functions are dispatch-bound per access; the jit is
-        compiled once per core spec — i.e. once per rebalance)."""
-        core = self.core
+        compiled once per core spec — i.e. once per rebalance).  The
+        pressure EWMA alpha is baked in: the step updates the device
+        pressure plane alongside the hit/miss/eviction counters."""
+        core, alpha = self.core, self.pressure_alpha
         return jax.jit(
             lambda st, ctr, ids, act: core.on_access_counted(
-                st, ctr, ids, active=act
+                st, ctr, ids, active=act, pressure_alpha=alpha
             )
         )
 
+    def _pull_pressure(self) -> None:
+        """Refresh the host mirror from the device plane (writable copy)."""
+        self._pressure = np.array(self.counters.pressure)
+
     def row(self, tenant: str) -> int:
+        """Core row index of ``tenant`` (raises KeyError for unknowns)."""
         try:
             return self._row_of[tenant]
         except KeyError:
@@ -155,7 +177,13 @@ class TenantCacheManager:
     def access(self, tenant: str, key: int) -> Tuple[bool, List[int]]:
         """One access of ``key`` by ``tenant``: a masked single-row step of
         the shared core.  Returns ``(hit, evicted_keys)`` — evicted keys are
-        what the row's policy displaced, for payload-store coherence."""
+        what the row's policy displaced, for payload-store coherence.
+
+        Mutates ``state``/``counters`` (including the device pressure EWMA,
+        updated inside the same jitted step) and the host mirrors
+        (``_pressure``, tenant-altitude F/R/clock).  Host path: pulls state
+        to report evicted keys, so it syncs the device every call — use
+        ``access_stream`` for throughput."""
         r = self.row(tenant)
         before = self._resident_ids(self.state, r)
         active = jnp.arange(self.rows) == r
@@ -165,9 +193,8 @@ class TenantCacheManager:
         )
         after = self._resident_ids(self.state, r)
         evicted = sorted(before - after)
-        # pressure EWMA + tenant-altitude AWRP metadata
-        a = self.pressure_alpha
-        self._pressure[r] = (1 - a) * self._pressure[r] + a * len(evicted)
+        # pressure EWMA advanced on device by the step itself; pull mirror
+        self._pull_pressure()
         self._tclock += 1
         self._tf[r] += 1
         self._tr[r] = self._tclock
@@ -179,12 +206,11 @@ class TenantCacheManager:
         """Replay a whole interleaved stream device-side: one jitted scan of
         masked ``on_access_counted`` steps (access i activates only row
         ``tenant_rows[i]``).  Returns the per-access hit bits.  State and
-        counters advance exactly as ``access`` would; the pressure EWMA
-        folds each tenant's batch in ONE step of equivalent total weight
-        (``1-(1-a)^n`` toward the batch mean) — same asymptotics, but
-        order-independent within the batch, so it can differ from the
-        per-access path by O(a) (evicted-key reporting and the exact EWMA
-        need the host path)."""
+        counters advance exactly as ``access`` would, including the
+        pressure EWMA — it folds per access INSIDE the scan, so batch
+        order matters exactly as on the host path (evicted-key reporting
+        still needs the host path).  Mutates ``state``/``counters`` and the
+        host mirrors; one device sync at the end, none per access."""
         tenant_rows = np.asarray(tenant_rows, dtype=np.int32)
         keys = np.asarray(keys, dtype=np.int32)
         if tenant_rows.shape != keys.shape or tenant_rows.ndim != 1:
@@ -193,6 +219,7 @@ class TenantCacheManager:
                 "be equal-length 1-D arrays"
             )
         core, R = self.core, self.rows
+        alpha = self.pressure_alpha
         ctr_before = jax.tree.map(np.asarray, self.counters)
 
         def body(carry, xs):
@@ -200,7 +227,8 @@ class TenantCacheManager:
             row, key = xs
             active = jnp.arange(R) == row
             state, ctr, hit = core.on_access_counted(
-                state, ctr, jnp.full((R,), key, dtype=jnp.int32), active=active
+                state, ctr, jnp.full((R,), key, dtype=jnp.int32),
+                active=active, pressure_alpha=alpha,
             )
             return (state, ctr), hit[row]
 
@@ -208,24 +236,15 @@ class TenantCacheManager:
             body, (self.state, self.counters), (jnp.asarray(tenant_rows),
                                                 jnp.asarray(keys))
         )
-        # fold the batch into the per-tenant EWMAs / AWRP metadata (one
-        # equivalent-weight step per tenant, not per access — see docstring)
+        self._pull_pressure()
+        # tenant-altitude AWRP metadata: F from the counter deltas, R from
+        # the stream's own order
         ctr_after = jax.tree.map(np.asarray, self.counters)
         d_acc = (ctr_after.hits + ctr_after.misses) - (
             ctr_before.hits + ctr_before.misses
-        )  # per-row access/eviction deltas; folded per tenant, see docstring
-        d_ev = ctr_after.evictions - ctr_before.evictions
-        a = self.pressure_alpha
+        )
         for r in range(R):
-            n = int(d_acc[r])
-            if n == 0:
-                continue
-            w = 1.0 - (1.0 - a) ** n
-            self._pressure[r] = (1 - w) * self._pressure[r] + w * (
-                int(d_ev[r]) / n
-            )
-            self._tf[r] += n
-        # last-access clocks from the stream's own order
+            self._tf[r] += int(d_acc[r])
         base = self._tclock
         self._tclock += len(tenant_rows)
         for i, r in enumerate(tenant_rows.tolist()):
@@ -242,16 +261,28 @@ class TenantCacheManager:
     def pressure(self, tenant: str) -> float:
         """Eviction-pressure EWMA: evictions per access of this tenant,
         exponentially weighted (``pressure_alpha``).  1.0 = every recent
-        access displaced a resident entry (the quota is thrashing)."""
+        access displaced a resident entry (the quota is thrashing).  Reads
+        the host mirror (no device sync); the mirror is refreshed by every
+        mutating call (``access``/``access_stream``/``decay_pressure``/
+        ``rebalance``/``AdmissionController.decide_batch``)."""
         return float(self._pressure[self.row(tenant)])
 
     def decay_pressure(self, tenant: str) -> float:
         """One EWMA step toward 0 without an access.  The EWMA only updates
         on the tenant's own accesses, so a fully shed tenant would otherwise
         stay above the shed threshold forever — the serving engine calls
-        this when it sheds, so refused work doubles as probation time."""
+        this when it sheds, so refused work doubles as probation time.
+        Mutates the device pressure plane (``admission_decay`` on this
+        tenant's row) and refreshes the host mirror."""
         r = self.row(tenant)
-        self._pressure[r] *= 1.0 - self.pressure_alpha
+        mask = np.zeros(self.rows, dtype=bool)
+        mask[r] = True
+        self.counters = self.counters._replace(
+            pressure=admission_decay(
+                self.counters.pressure, mask, self.pressure_alpha
+            )
+        )
+        self._pull_pressure()
         return float(self._pressure[r])
 
     def tenant_weights(self) -> Dict[str, float]:
@@ -334,8 +365,16 @@ class TenantCacheManager:
             ev = self._shrink_flat_row(r, new_w)
             if ev:
                 evicted_by[t] = ev
-                a = self.pressure_alpha
-                self._pressure[r] = (1 - a) * self._pressure[r] + a * len(ev)
+                # fold the shrink's evictions into the DEVICE pressure plane
+                # (same shape as one access evicting len(ev) entries), then
+                # refresh the mirror
+                a = jnp.float32(self.pressure_alpha)
+                p = self.counters.pressure
+                p_r = (1.0 - a) * p[r] + a * jnp.float32(len(ev))
+                self.counters = self.counters._replace(
+                    pressure=p.at[r].set(p_r)
+                )
+        self._pull_pressure()
         return moved, evicted_by
 
     def _shrink_flat_row(self, r: int, new_ways: int) -> List[int]:
@@ -366,7 +405,8 @@ class TenantCacheManager:
     # -- telemetry ----------------------------------------------------------
     def row_telemetry(self) -> Dict[str, np.ndarray]:
         """The core's per-row accounting, pulled to host: hits / misses /
-        evictions / accesses / occupancy / capacity, each ``(rows,)``."""
+        evictions / accesses / occupancy / capacity / pressure, each
+        ``(rows,)``.  Read-only (one device sync; mutates nothing)."""
         t = self.core.row_telemetry(self.state, self.counters)
         return {k: np.asarray(v) for k, v in t.items()}
 
@@ -414,6 +454,11 @@ class AdmissionController:
             )
 
     def decide(self, manager: TenantCacheManager, tenant: str) -> str:
+        """One host-side decision for ``tenant``: ``"accept"`` inside the
+        warmup window, else thresholds on the pulled pressure mirror.
+        Read-only — mutates neither the manager nor the controller (the
+        caller applies ``decay_pressure`` on shed; ``decide_batch`` does
+        both in one device pass)."""
         if manager.accesses(tenant) < self.warmup:
             return ACCEPT
         p = manager.pressure(tenant)
@@ -422,6 +467,68 @@ class AdmissionController:
         if p >= self.defer_at:
             return DEFER
         return ACCEPT
+
+    def decide_batch(
+        self, manager: TenantCacheManager, tenants: List[str]
+    ) -> List[str]:
+        """Device admission for a whole request batch: one jitted
+        sequential scan of ``admission_decide`` + decay-on-shed over the
+        batch, bit-identical to calling ``decide`` per request and
+        ``manager.decay_pressure`` on each shed (later requests see the
+        pressure decayed by earlier sheds, exactly like the host loop).
+
+        Bit-identity holds because both paths read the same float32
+        pressure plane: the host mirror is a pulled copy of
+        ``RowCounters.pressure`` and the threshold compares cannot disagree
+        across the float64 host cast (no float32 lies strictly between a
+        threshold and its float32 rounding).
+
+        Mutates ``manager.counters.pressure`` (the sheds' decays) and
+        refreshes the mirror; returns one ``"accept"/"defer"/"shed"``
+        string per request, in order."""
+        rows = np.asarray([manager.row(t) for t in tenants], dtype=np.int32)
+        if rows.size == 0:
+            return []
+        fn = _decide_batch_fn(
+            self.defer_at,
+            self.shed_at,
+            self.warmup,
+            manager.pressure_alpha,
+            manager.rows,
+        )
+        acc = manager.counters.hits + manager.counters.misses
+        codes, new_p = fn(manager.counters.pressure, acc, jnp.asarray(rows))
+        manager.counters = manager.counters._replace(pressure=new_p)
+        manager._pull_pressure()
+        order = (ACCEPT, DEFER, SHED)  # indexed by ADMIT_* codes
+        return [order[int(c)] for c in np.asarray(codes)]
+
+
+@functools.lru_cache(maxsize=None)
+def _decide_batch_fn(defer_at, shed_at, warmup, alpha, rows):
+    """Jitted batch-admission program, cached per (thresholds, alpha, rows).
+
+    Sequential by construction: the scan carries the pressure plane so a
+    shed's probation decay is visible to every later request in the batch —
+    the same ordering contract as the host per-request loop."""
+
+    @jax.jit
+    def fn(pressure, accesses, req_rows):
+        def body(p, r):
+            code = admission_decide(
+                p[r],
+                accesses[r],
+                defer_at=defer_at,
+                shed_at=shed_at,
+                warmup=warmup,
+            )
+            shed_here = (jnp.arange(rows) == r) & (code == ADMIT_SHED)
+            return admission_decay(p, shed_here, alpha), code
+
+        p_final, codes = jax.lax.scan(body, pressure, req_rows)
+        return codes, p_final
+
+    return fn
 
 
 class TenantPrefixCache:
@@ -440,6 +547,10 @@ class TenantPrefixCache:
         }
 
     def lookup(self, tenant: str, tokens) -> Optional[Any]:
+        """Payload for this tenant+prompt, or None.  A hit issues the one
+        policy access (mutating the shared core row); a miss mutates
+        NOTHING — the miss is accounted when the caller ``insert``s, so a
+        shed request that never inserts leaves no trace."""
         key = _prompt_key(tokens)
         store = self.stores[tenant]
         if key in store:
@@ -448,6 +559,10 @@ class TenantPrefixCache:
         return None  # the miss is accounted when the caller inserts
 
     def insert(self, tenant: str, tokens, payload: Any) -> None:
+        """Store ``payload`` under the prompt's key: issues the miss-side
+        policy access and drops payloads the row's policy evicted (store ==
+        row residency stays exact).  Mutates the core row and this tenant's
+        store."""
         key = _prompt_key(tokens)
         store = self.stores[tenant]
         _, evicted = self.manager.access(tenant, key)
@@ -464,6 +579,8 @@ class TenantPrefixCache:
         return moved, evicted_by
 
     def telemetry(self) -> Dict[str, dict]:
+        """Manager telemetry plus per-tenant payload-store ``entries``
+        (read-only; one device sync via the manager)."""
         out = self.manager.telemetry()
         for t, d in out.items():
             d["entries"] = len(self.stores[t])

@@ -343,6 +343,117 @@ def test_admission_sheds_hog_without_perturbing_other_tenant(engine):
     assert eng.stats["shed"] >= 1
 
 
+def test_shed_request_mutates_no_pool_or_tenancy_state(engine):
+    """Regression (ISSUE 6): a shed request must leave EVERY cache and
+    tenancy structure untouched — core state, hit/miss/eviction counters,
+    payload stores, prefill count, KV sessions.  The only permitted change
+    is the shed tenant's pressure decay (probation credit)."""
+    import jax as _jax
+
+    from repro.serve.tenancy import AdmissionController
+
+    adm = AdmissionController(defer_at=0.1, shed_at=0.2, warmup=1)
+    eng = ServeEngine(engine.cfg, engine.params, max_len=96,
+                      tenants={"hog": 1, "calm": 2}, admission=adm)
+    # drive the hog into shed territory: distinct prompts at quota 1
+    for i in range(6):
+        eng.generate([Request(i, [200 + 16 * i + j for j in range(16)],
+                              max_new_tokens=2, tenant_id="hog")])
+    mgr = eng.tenant_cache.manager
+    assert adm.decide(mgr, "hog") == "shed"
+
+    state_before = _jax.tree.map(np.asarray, mgr.state)
+    ctr_before = _jax.tree.map(np.asarray, mgr.counters)
+    stores_before = {t: dict(s) for t, s in eng.tenant_cache.stores.items()}
+    prefills_before = eng.stats["prefills"]
+    sessions_before = dict(eng._kv_sessions)
+    p_before = float(mgr.pressure("hog"))
+
+    out = eng.generate([Request(99, list(range(1, 17)), max_new_tokens=4,
+                                tenant_id="hog")])
+    assert out[99].status == "shed" and out[99].tokens == []
+
+    state_after = _jax.tree.map(np.asarray, mgr.state)
+    for b, a in zip(_jax.tree.leaves(state_before),
+                    _jax.tree.leaves(state_after)):
+        assert np.array_equal(b, a)
+    for name in ("hits", "misses", "evictions"):
+        assert np.array_equal(getattr(ctr_before, name),
+                              getattr(_jax.tree.map(np.asarray,
+                                                    mgr.counters), name))
+    assert {t: dict(s) for t, s in eng.tenant_cache.stores.items()} \
+        == stores_before
+    assert eng.stats["prefills"] == prefills_before
+    assert eng._kv_sessions == sessions_before
+    # pressure: exactly one probation decay, nothing else
+    assert float(mgr.pressure("hog")) == np.float32(p_before) * np.float32(
+        1.0 - mgr.pressure_alpha)
+    assert float(mgr.pressure("calm")) == 0.0
+
+
+def test_deferred_then_completed_matches_unpressured_telemetry(engine):
+    """Bugfix (ISSUE 6): a deferred-then-completed request reports
+    ``status="deferred"`` but is otherwise indistinguishable from an
+    accepted run — same tokens, same prefix-cache counters, same engine
+    stats (minus the deferral count itself)."""
+    from repro.serve.tenancy import AdmissionController
+
+    # defer_at=0, huge shed_at, warmup=0: every request defers, none shed
+    adm = AdmissionController(defer_at=0.0, shed_at=100.0, warmup=0)
+    deferred_eng = ServeEngine(engine.cfg, engine.params, max_len=96,
+                               tenants={"t": 3}, admission=adm)
+    plain_eng = ServeEngine(engine.cfg, engine.params, max_len=96,
+                            tenants={"t": 3})
+    prompts = [list(range(1, 17)), list(range(30, 46)), list(range(1, 17))]
+    for i, p in enumerate(prompts):
+        d = deferred_eng.generate([Request(i, list(p), max_new_tokens=4,
+                                           tenant_id="t")])
+        o = plain_eng.generate([Request(i, list(p), max_new_tokens=4,
+                                        tenant_id="t")])
+        assert d[i].status == "deferred" and o[i].status == "ok"
+        assert d[i].tokens == o[i].tokens
+        assert d[i].prefill_cached == o[i].prefill_cached
+    td = deferred_eng.telemetry()["prefix/t"]
+    tp = plain_eng.telemetry()["prefix/t"]
+    assert td == tp  # counters identical: hits/misses/evictions/pressure/...
+    sd, sp = dict(deferred_eng.stats), dict(plain_eng.stats)
+    assert sd.pop("deferred") == len(prompts) and sp.pop("deferred") == 0
+    assert sd == sp
+
+
+def test_jit_loop_matches_host_loop_greedy(engine):
+    """The donated-buffer scan loop and the host per-step loop agree on
+    greedy decode (argmax is stable across the two compilation contexts),
+    and the jit loop counts the same decode steps."""
+    jit_eng = ServeEngine(engine.cfg, engine.params, max_len=96,
+                          jit_loop=True)
+    host_eng = ServeEngine(engine.cfg, engine.params, max_len=96,
+                           jit_loop=False)
+    prompt = list(range(7, 23))
+    rj = jit_eng.generate([Request(0, list(prompt), max_new_tokens=6)])
+    rh = host_eng.generate([Request(0, list(prompt), max_new_tokens=6)])
+    assert rj[0].tokens == rh[0].tokens
+    assert len(rj[0].tokens) == 6
+    assert jit_eng.stats["decode_steps"] == host_eng.stats["decode_steps"]
+
+
+def test_jit_loop_prefix_payload_survives_donation(engine):
+    """Donation regression: stored prefix payloads must be snapshots —
+    aliasing them with the loop's donated buffers would invalidate the
+    entry on first reuse (jax deletes donated arrays).  Three hits on the
+    same entry prove the payload outlives repeated donated loops."""
+    eng = ServeEngine(engine.cfg, engine.params, max_len=96, jit_loop=True)
+    prompt = list(range(60, 76))
+    first = eng.generate([Request(0, list(prompt), max_new_tokens=4)])
+    outs = [eng.generate([Request(i, list(prompt), max_new_tokens=4)])
+            for i in (1, 2, 3)]
+    assert not first[0].prefill_cached
+    for i, out in enumerate(outs, start=1):
+        assert out[i].prefill_cached  # every reuse hit the stored payload
+        assert out[i].tokens == first[0].tokens
+    assert eng.stats["prefills"] == 1
+
+
 def test_ghost_hit_feed_adapts_p_under_prefix_reuse():
     """Acceptance (c): in the true-adaptive paged mode, prefix-reuse traffic
     (re-prefills of page positions the tenant's previous pool evicted)

@@ -262,6 +262,75 @@ def test_rows_still_match_oracles_after_rebalance_growth():
 # ---------------------------------------------------------------------------
 
 
+def _host_admission_loop(adm, mgr, batch):
+    """The host reference loop: per-request decide + decay-on-shed — the
+    sequencing ``decide_batch`` must reproduce."""
+    out = []
+    for t in batch:
+        d = adm.decide(mgr, t)
+        if d == SHED:
+            mgr.decay_pressure(t)
+        out.append(d)
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    d20=st.integers(min_value=0, max_value=14),
+    s20=st.integers(min_value=0, max_value=6),
+    warmup=st.integers(min_value=0, max_value=20),
+)
+def test_admission_device_batch_bit_identical_to_host(seed, d20, s20, warmup):
+    """The tentpole admission contract (DESIGN.md §9): ``decide_batch``
+    (one jitted scan on the device pressure plane) reproduces the host
+    per-request decide + decay-on-shed loop bit-for-bit — decisions AND
+    the post-batch pressure planes, across warmup boundaries, defer/shed
+    thresholds and multi-round interleaving with real access streams."""
+    defer_at, shed_at = d20 / 20.0, (d20 + s20) / 20.0
+    adm = AdmissionController(defer_at=defer_at, shed_at=shed_at,
+                              warmup=warmup)
+    rng = np.random.RandomState(seed)
+    quotas = dict(zip(TENANTS, (2, 1, 3)))
+    m_host = TenantCacheManager(quotas, "lru", pressure_alpha=0.3)
+    m_dev = TenantCacheManager(quotas, "lru", pressure_alpha=0.3)
+    for _ in range(3):
+        rows = rng.randint(0, 3, size=25)
+        keys = rng.randint(0, 7, size=25)
+        m_host.access_stream(rows, keys)
+        m_dev.access_stream(rows, keys)
+        batch = [TENANTS[i] for i in rng.randint(0, 3, size=10)]
+        host_dec = _host_admission_loop(adm, m_host, batch)
+        dev_dec = adm.decide_batch(m_dev, batch)
+        assert dev_dec == host_dec, (batch, host_dec, dev_dec)
+        # pressure planes bit-identical, device AND mirror
+        assert np.array_equal(
+            np.asarray(m_host.counters.pressure),
+            np.asarray(m_dev.counters.pressure))
+        assert np.array_equal(m_host._pressure, m_dev._pressure)
+    assert adm.decide_batch(m_dev, []) == []  # empty batch: no-op
+
+
+def test_pressure_ewma_exact_across_access_paths():
+    """The stream replay folds the pressure EWMA per access INSIDE the
+    scan (not an O(alpha)-approximate batch fold), so the per-access host
+    path and the device scan land on the same float32 pressure values —
+    the property that lets one admission controller serve both paths."""
+    rng = np.random.RandomState(5)
+    rows = rng.randint(0, 2, size=150)
+    keys = rng.randint(0, 9, size=150)
+    m1 = TenantCacheManager({"a": 3, "b": 2}, "lru")
+    m2 = TenantCacheManager({"a": 3, "b": 2}, "lru")
+    for r, k in zip(rows, keys):
+        m1.access(m1.tenants[r], int(k))
+    m2.access_stream(rows, keys)
+    assert m1._pressure.dtype == np.float32
+    assert np.array_equal(m1._pressure, m2._pressure)
+    assert float(m1._pressure.max()) > 0.2  # the signal actually moved
+    # row_telemetry exposes the same plane
+    assert np.array_equal(m1.row_telemetry()["pressure"], m1._pressure)
+
+
 def test_admission_thresholds_and_warmup():
     with pytest.raises(ValueError, match="defer_at <= shed_at"):
         AdmissionController(defer_at=0.9, shed_at=0.5)

@@ -1,0 +1,43 @@
+"""Extract README python code blocks and execute them (CI doc-checks job).
+
+Every fenced ```python block in README.md runs, in order, in ONE shared
+namespace (later blocks may use names an earlier block defined — the
+telemetry snippet reads the engine the serving snippet built).  Any
+exception fails the script, so the README's quickstarts can't silently
+rot as the APIs move.
+
+Usage::
+
+    PYTHONPATH=src python tools/run_readme_snippets.py [README.md]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def main(argv) -> int:
+    readme = pathlib.Path(argv[0]) if argv else REPO / "README.md"
+    text = readme.read_text()
+    blocks = [m.group(1) for m in FENCE.finditer(text)]
+    if not blocks:
+        print(f"no ```python blocks found in {readme}")
+        return 1
+    ns: dict = {"__name__": "__readme__"}
+    for i, block in enumerate(blocks, 1):
+        line = 1 + text[: text.index(block)].count("\n")
+        print(f"--- block {i}/{len(blocks)} ({readme.name}:{line}) ---")
+        code = compile(block, f"{readme.name}:block{i}", "exec")
+        exec(code, ns)  # noqa: S102 — executing our own docs is the point
+    print(f"\nreadme snippets ok: {len(blocks)} blocks executed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
