@@ -17,6 +17,9 @@ GRID = [(1.0, 1.0), (0.5, 1.0), (2.0, 1.0), (1.0, 0.5), (1.0, 2.0),
 
 
 def run(out_lines=None):
+    """Sweep AWRP's (alpha, beta) weighting grid over the trace suite and
+    print mean hit %% per configuration (CSV rows appended to
+    ``out_lines``) — the paper-§5 sensitivity direction."""
     print("== AWRP(alpha, beta) ablation: mean hit % over 4 cache sizes ==")
     header = f"{'trace':>14} | " + " | ".join(f"a{a:g}/b{b:g}" for a, b in GRID)
     print(header)

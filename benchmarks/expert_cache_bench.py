@@ -30,6 +30,9 @@ def _trace(E, alpha, phases, n=20_000, seed=0):
 
 
 def run(out_lines=None):
+    """Replay phase-drifting Zipf expert-routing traces through each cache
+    policy and report hit ratio plus host-to-device GB moved (CSV rows
+    appended to ``out_lines``)."""
     print("== expert cache (policy -> hit ratio | GB transferred) ==")
     pols = ["awrp", "lru", "fifo", "lfu", "car", "arc"]
     for name, E, cap, mb, alpha, phases in CASES:

@@ -16,6 +16,9 @@ from repro.optim.grad_compress import (
 
 
 def run(out_lines=None):
+    """Measure int8 gradient-compression quantization error and
+    compressed-allreduce byte savings (CSV rows appended to
+    ``out_lines``)."""
     print("== gradient compression ==")
     # numerics: quant->dequant relative error on realistic grad magnitudes
     key = jax.random.PRNGKey(0)

@@ -29,6 +29,10 @@ def _time(fn, *args, iters=20):
 
 
 def run(out_lines=None):
+    """Time the kernel-backed ops (awrp_select, paged/flash attention) on
+    their serving shapes via the jnp reference path (CSV rows appended to
+    ``out_lines``; the Pallas paths are correctness-tested in
+    tests/test_kernels.py)."""
     print("== kernel bench (jnp reference path on CPU; Pallas validated in "
           "interpret mode by tests/test_kernels.py) ==")
     key = jax.random.PRNGKey(0)

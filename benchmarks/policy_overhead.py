@@ -30,6 +30,8 @@ SWEEP_CAPS = [30, 60, 90, 120, 150, 180, 210, 240]  # the Table-1 frame sizes
 
 
 def host_us_per_access(policy: str, trace, cap) -> float:
+    """Microseconds per access of the host oracle for ``policy`` at
+    capacity ``cap`` over ``trace`` (one timed pass)."""
     p = make_policy(policy, cap)
     if hasattr(p, "prepare"):
         p.prepare(trace)
@@ -40,6 +42,8 @@ def host_us_per_access(policy: str, trace, cap) -> float:
 
 
 def device_us_per_access(policy: str, trace, cap) -> float:
+    """Microseconds per access of the jitted device scan for ``policy``
+    (compile excluded; mean of 3 warm passes)."""
     tr = jnp.asarray(trace)
     h = simulate_trace(tr, cap, policy=policy)
     h.block_until_ready()  # compile
@@ -122,6 +126,10 @@ def batched_sweep_speedup(out_lines=None, n_accesses: int = 100_000,
 
 
 def run(out_lines=None, smoke: bool = False, sweep_json=None):
+    """Per-policy host vs device overhead table (the paper §3 claim) plus
+    the batched sweep-engine throughput/speedup record — written as the
+    base ``sweep_json`` record other sections merge into.  ``smoke``
+    shrinks the trace; CSV rows appended to ``out_lines``."""
     trace = TRACE[:5_000] if smoke else TRACE
     print("== policy overhead ==")
     print(f"{'policy':>8} | host us/access | device us/access (lax.scan)")

@@ -16,6 +16,8 @@ from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
 
 
 def load_cells(art_dir: str = "artifacts/dryrun") -> List[dict]:
+    """Load every ok-status dry-run artifact JSON carrying an ``analytic``
+    block from ``art_dir`` (sorted for stable report order)."""
     cells = []
     for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
         d = json.load(open(f))
@@ -25,6 +27,8 @@ def load_cells(art_dir: str = "artifacts/dryrun") -> List[dict]:
 
 
 def terms(d: dict) -> dict:
+    """Roofline terms for one dry-run cell: compute/memory/collective
+    seconds, the binding bottleneck, useful-FLOP fraction and MFU."""
     a = d["analytic"]
     compute_s = a["hlo_flops"] / PEAK_FLOPS
     memory_s = a["hbm_bytes"] / HBM_BW
@@ -43,6 +47,8 @@ def terms(d: dict) -> dict:
 
 
 def render(cells: List[dict], mesh: str = "single") -> str:
+    """Markdown roofline table for the cells on ``mesh`` (one row per
+    arch/shape, columns from :func:`terms`)."""
     rows = [
         "| arch | shape | compute s | memory s | coll s | bottleneck "
         "| useful FLOP frac | roofline MFU |",
@@ -61,6 +67,8 @@ def render(cells: List[dict], mesh: str = "single") -> str:
 
 
 def run(out_lines=None):
+    """Render the roofline report from recorded dry-run artifacts (no-op
+    with a hint when none exist); CSV rows appended to ``out_lines``."""
     cells = load_cells()
     if not cells:
         print("no dry-run artifacts found — run python -m repro.launch.dryrun --all")

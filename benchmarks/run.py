@@ -19,7 +19,10 @@ import sys
 # holds benchmarks/, not the repo root that anchors the benchmarks package)
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.xla_env import enable_fast_cpu_scan  # noqa: E402
+from benchmarks.xla_env import (  # noqa: E402
+    enable_fast_cpu_scan,
+    set_host_device_count,
+)
 
 enable_fast_cpu_scan()  # must run before anything imports jax
 
@@ -29,13 +32,19 @@ import traceback
 
 #: sections cheap enough for the CI bench-smoke job (the rest stress model /
 #: serving layers and take minutes even at reduced sizes).  policy_overhead
-#: precedes tenancy: both contribute to the --sweep-json artifact and
-#: tenancy merges into the record policy_overhead writes.
+#: precedes tenancy and sharded_sweep: all three contribute to the
+#: --sweep-json artifact and the later two merge into the record
+#: policy_overhead writes.
 SMOKE_SECTIONS = ("table1", "trace_suite", "policy_overhead", "tenancy",
-                  "serve_loop", "kernel_bench")
+                  "sharded_sweep", "serve_loop", "kernel_bench")
 
 
 def main(argv=None) -> None:
+    """Parse args, run the selected benchmark sections, emit the CSV
+    summary, and exit non-zero if any section failed.  ``--devices`` is
+    applied via ``set_host_device_count`` BEFORE any benchmark module (and
+    therefore jax) is imported — that is why the section modules are
+    imported inside this function."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes + cheap section subset (CI gate)")
@@ -49,7 +58,13 @@ def main(argv=None) -> None:
                     "speedup-vs-host record (BENCH_sweep.json) to PATH — "
                     "uploaded as a CI artifact to track the perf trajectory "
                     "PR-over-PR")
+    ap.add_argument("--devices", type=int, metavar="N", default=None,
+                    help="expose N XLA host devices before jax loads "
+                    "(sharded_sweep needs >=2; host devices time-slice the "
+                    "physical cores)")
     args = ap.parse_args(argv)
+    if args.devices is not None:
+        set_host_device_count(args.devices)
 
     out_lines = []
     sections = []
@@ -79,6 +94,7 @@ def main(argv=None) -> None:
         serve_loop_bench,
         serve_policy_bench,
         serve_quality_bench,
+        sharded_sweep,
         table1,
         tenancy_bench,
         trace_suite,
@@ -104,6 +120,9 @@ def main(argv=None) -> None:
         "tenancy": (
             "Multi-tenant tenancy (shared vs quota rows vs rebalancing)",
             tenancy_bench.run),
+        "sharded_sweep": (
+            "Mesh-sharded sweep (bit-identity gate + scaling, DESIGN.md §4)",
+            sharded_sweep.run),
         "serve_loop": (
             "Fully-jitted serve loop vs host-orchestrated (DESIGN.md §9)",
             serve_loop_bench.run),

@@ -110,6 +110,10 @@ def _host_decisions(adm, mgr, stream):
 
 
 def run(out_lines=None, smoke: bool = False, sweep_json=None):
+    """Time the fully-jitted decode loop against the host-orchestrated
+    baseline (same request stream) plus batched vs per-request admission;
+    merges the ``serve_loop`` record into ``sweep_json``.  ``smoke``
+    shrinks the stream; CSV rows appended to ``out_lines``."""
     n_reqs = 9 if smoke else 24
     new_tokens = 8 if smoke else 16
     n_decisions = 240 if smoke else 1200

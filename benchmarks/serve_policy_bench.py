@@ -118,6 +118,9 @@ def _drive(policy: str, steps: int, seed: int):
 
 
 def run(out_lines=None, smoke: bool = False):
+    """Ablate paged-KV eviction policies (classic vs true-adaptive) on
+    identical decode traces, scoring oracle attention mass retained;
+    ``smoke`` shrinks the decode; CSV rows appended to ``out_lines``."""
     steps = 384 if smoke else 1536
     print("== paged-KV serving ablation: oracle attention mass retained ==")
     print(f"   pool {PAGES} pages x {PAGE_SIZE} tokens, {steps}-step decode, "

@@ -29,6 +29,9 @@ def _kl(p_logits, q_logits, vocab):
 
 
 def run(out_lines=None, steps: int = 48, pages: int = 4, page_size: int = 8):
+    """Serve the same decode under full KV vs each bounded-KV policy and
+    report the logits KL vs the full-cache reference (CSV rows appended
+    to ``out_lines``)."""
     base = load_smoke_config("gemma3_27b")
     base = dataclasses.replace(base, dtype="float32", param_dtype="float32",
                                bounded_kv_pages=pages, page_size=page_size)

@@ -31,6 +31,9 @@ CAPS = [30, 60, 90, 120, 150, 180, 210, 240]  # paper text says 8 sizes
 
 
 def run(out_lines=None):
+    """Reproduce the paper's Table 1 hit-ratio grid on the calibrated
+    stand-in trace and check AWRP's gain ordering (CSV rows appended to
+    ``out_lines``)."""
     tr = paper_trace()
     res = sweep(["lru", "fifo", "car", "awrp"], tr, CAPS)
     print("== Table 1 reproduction (stand-in trace; paper digits in brackets) ==")

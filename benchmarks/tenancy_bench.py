@@ -97,6 +97,10 @@ def _rebalanced(policy, quotas, tenant_rows, keys, chunks=8):
 
 
 def run(out_lines=None, smoke: bool = False, sweep_json=None):
+    """Ablate shared cache vs quota rows vs AWRP-ranked rebalancing on
+    the identical interleaved multi-tenant trace; merges the ``tenancy``
+    record into ``sweep_json``.  ``smoke`` shrinks the trace; CSV rows
+    appended to ``out_lines``."""
     n = 1_500 if smoke else 6_000
     policy = "awrp"
     quotas = (16, 16, 16)

@@ -28,6 +28,8 @@ POLICIES = ["lru", "fifo", "lfu", "car", "arc", "2q", "awrp", "opt"]
 
 
 def suite():
+    """The named generalization traces (matmul/mergesort/hashjoin/zipf/
+    markov/scan-mix) the suite sweeps, freshly generated."""
     return {
         "matmul_tiled": trace_matmul(n=12, tile=4),
         "matmul_flat": trace_matmul(n=16),
@@ -41,6 +43,9 @@ def suite():
 
 
 def run(out_lines=None, smoke: bool = False):
+    """Sweep every policy over the generalization trace suite at 4 cache
+    sizes and print mean hit ratios (``smoke`` trims the policy list;
+    CSV rows appended to ``out_lines``)."""
     print("== trace suite: mean hit ratio over 4 cache sizes (10/25/50/75% of "
           "working set) ==")
     header = f"{'trace':>14} | " + " | ".join(f"{p:>6}" for p in POLICIES)

@@ -17,8 +17,35 @@ _FLAG = "--xla_cpu_use_thunk_runtime=false"
 
 
 def enable_fast_cpu_scan() -> None:
+    """Select the legacy (in-place scan) XLA:CPU runtime via ``XLA_FLAGS``.
+
+    No-op if jax was already imported (the flag would be ignored) or if the
+    operator configured the knob themselves."""
     if "jax" in sys.modules:
         return  # too late — jax already read XLA_FLAGS
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_cpu_use_thunk_runtime" not in flags:
         os.environ["XLA_FLAGS"] = f"{flags} {_FLAG}".strip()
+
+
+def set_host_device_count(n: int) -> None:
+    """Expose ``n`` XLA host-platform devices for mesh benchmarks.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``.
+    Like :func:`enable_fast_cpu_scan` this must run before the first jax
+    import — a :class:`RuntimeError` is raised if it is already too late,
+    because silently benchmarking on the wrong device count would corrupt
+    the recorded scaling numbers.  An operator-provided count is respected.
+    """
+    if int(n) < 1:
+        raise ValueError(f"device count must be >= 1, got {n}")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return  # operator already pinned a count
+    if "jax" in sys.modules:
+        raise RuntimeError(
+            "set_host_device_count must be called before jax is imported"
+        )
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={int(n)}".strip()
+    )

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 import numpy as np
 
+from repro.core import sharding
 from repro.core.policy_core import (
     _TAG_B1,
     _TAG_B2,
@@ -68,13 +69,19 @@ class PagedPool(NamedTuple):
     open_slot: jax.Array  # (B,) int32 slot currently being written
 
 
-def init_pool(batch: int, pages: int, page_size: int, kvd: int, dtype) -> PagedPool:
+def init_pool(
+    batch: int, pages: int, page_size: int, kvd: int, dtype, *, mesh=None
+) -> PagedPool:
     """Concrete all-zeros pool (all pages free: ``page_start == -1``).
 
     Pure constructor — allocates device arrays, mutates nothing.  The pool
     itself is an immutable NamedTuple pytree: every update function below
-    returns a new pool, so it is safe to carry through jit/scan/donation."""
-    return PagedPool(
+    returns a new pool, so it is safe to carry through jit/scan/donation.
+    ``mesh`` (a ``core.sharding`` rows mesh) places the per-sequence batch
+    axis across devices — every pool update is sequence-local, so a sharded
+    pool decides identically to an unsharded one; ``batch`` must divide the
+    device count."""
+    pool = PagedPool(
         k=jnp.zeros((batch, pages, page_size, kvd), dtype),
         v=jnp.zeros((batch, pages, page_size, kvd), dtype),
         f=jnp.zeros((batch, pages), jnp.int32),
@@ -83,6 +90,7 @@ def init_pool(batch: int, pages: int, page_size: int, kvd: int, dtype) -> PagedP
         clock=jnp.zeros((batch,), jnp.int32),
         open_slot=jnp.zeros((batch,), jnp.int32),
     )
+    return sharding.shard_rows(None, pool, mesh)
 
 
 def abstract_pool(batch: int, pages: int, page_size: int, kvd: int, dtype):
@@ -230,13 +238,18 @@ def adaptive_core(kv_policy: str, batch: int, pages: int) -> AdaptiveCore:
 
 
 def init_adaptive_pool(
-    batch: int, pages: int, page_size: int, kvd: int, dtype, kv_policy: str
+    batch: int, pages: int, page_size: int, kvd: int, dtype, kv_policy: str,
+    *, mesh=None,
 ) -> AdaptivePagedPool:
     """Concrete empty pool + freshly initialised ARC/CAR planes.  Pure
-    constructor; the result is an immutable pytree (see ``init_pool``)."""
+    constructor; the result is an immutable pytree (see ``init_pool``).
+    ``mesh`` batches the per-sequence adaptive pools across its devices —
+    pool and policy planes shard on the same rows axis, so each device
+    carries whole sequences (``batch`` must divide the device count) and
+    decisions stay bit-identical to the unsharded pool."""
     return AdaptivePagedPool(
-        pool=init_pool(batch, pages, page_size, kvd, dtype),
-        policy=adaptive_core(kv_policy, batch, pages).init(),
+        pool=init_pool(batch, pages, page_size, kvd, dtype, mesh=mesh),
+        policy=adaptive_core(kv_policy, batch, pages).init(mesh=mesh),
     )
 
 

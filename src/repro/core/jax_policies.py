@@ -56,7 +56,9 @@ from typing import NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
+from repro.core import sharding
 from repro.core.policy_core import (
     ADAPTIVE_POLICIES,
     DEVICE_POLICIES,
@@ -67,6 +69,8 @@ from repro.core.policy_core import (
     AdaptiveState,
     FlatCore,
     FlatState,
+    _GridMasks,
+    _make_masks,
     awrp_weights,
     init_adaptive_state,
 )
@@ -235,6 +239,7 @@ def init_set_state(
     jax.jit,
     static_argnames=(
         "policy_ids", "ways", "num_sets", "use_kernel", "unroll", "renorm_at",
+        "mesh",
     ),
 )
 def _simulate_batched_impl(
@@ -245,6 +250,7 @@ def _simulate_batched_impl(
     use_kernel: bool,
     unroll: int,
     renorm_at: Optional[int],
+    mesh,
 ) -> jax.Array:
     N, T = traces.shape
     P, C = len(policy_ids), len(ways)
@@ -270,6 +276,18 @@ def _simulate_batched_impl(
     take_s, take_a, take_c = map(jnp.asarray, (simple_idx, arc_idx, car_idx))
 
     L = 2 * maxW  # adaptive directory lanes (cache + ghosts)
+    xs = traces.T.astype(jnp.int32)  # (T, N)
+
+    if mesh is not None:
+        hits = _sharded_groups_scan(
+            xs, mesh,
+            num_sets=num_sets, use_kernel=use_kernel, unroll=unroll,
+            renorm_at=renorm_at, pids=pids, ways_b=ways_b,
+            simple_idx=simple_idx, arc_idx=arc_idx, car_idx=car_idx,
+            W=W, L=L, maxW=maxW, PC=PC,
+        )
+        return jnp.moveaxis(hits[:, inv], 0, -1).reshape(N, P, C, T)
+
     flat_core = (
         FlatCore(
             pids=tuple(int(p) for p in pids[simple_idx]),
@@ -325,11 +343,137 @@ def _simulate_batched_impl(
         arc_core.init() if arc_core is not None else (),
         car_core.init() if car_core is not None else (),
     )
-    xs = traces.T.astype(jnp.int32)  # (T, N)
     _, hits = jax.lax.scan(step, carry0, xs, unroll=unroll)
 
     # (T, concat-of-groups) -> original row order -> (N, P, C, T)
     return jnp.moveaxis(hits[:, inv], 0, -1).reshape(N, P, C, T)
+
+
+def _sharded_groups_scan(
+    xs: jax.Array,  # (T, N) int32
+    mesh,
+    *,
+    num_sets: int,
+    use_kernel: bool,
+    unroll: int,
+    renorm_at: Optional[int],
+    pids: np.ndarray,  # (B,) grid policy ids
+    ways_b: np.ndarray,  # (B,) grid per-row ways
+    simple_idx: np.ndarray,
+    arc_idx: np.ndarray,
+    car_idx: np.ndarray,
+    W: int,
+    L: int,
+    maxW: int,
+    PC: int,
+) -> jax.Array:
+    """Mesh-sharded grid scan (DESIGN.md §4): the whole sweep inside ONE
+    ``shard_map`` over the rows mesh.
+
+    Each state-layout group (flat / arc / car) pads its rows up to a
+    device-count multiple (``sharding.pad_rows_to``; the pad rows run real
+    accesses whose hits are sliced off) and every per-row constant — the
+    flat grid masks, the adaptive capacities, each row's trace index — is
+    passed in as a *sharded operand* rather than closed over, so each
+    device's trace sees only its own rows.  That makes the two patterns
+    GSPMD partitions badly shard-local instead: the flat cores' per-row
+    scatters stay device-local, and CAR's clock-hand ``while_loop``
+    terminates on the device's own rows (a per-shard ``jnp.any``, not a
+    per-iteration collective).  The scan body has no cross-row reductions,
+    so the program has ZERO per-step collectives; decisions are
+    bit-identical to the unsharded scan because per-row arithmetic is
+    untouched — only the partitioning changes (tests/test_sharding.py).
+
+    Returns ``(T, Bs+Ba+Bc)`` hits in the unsharded path's
+    group-concatenated row order."""
+    from jax.experimental.shard_map import shard_map
+
+    n = mesh.devices.size
+    rows_p = PartitionSpec(sharding.ROWS_AXIS)
+    operands, specs_in, group_meta = [], [], []
+
+    def add_group(kind: str, idx: np.ndarray) -> None:
+        B = len(idx)
+        if not B:
+            return
+        Bp = sharding.pad_rows_to(B, n)
+        k = Bp // n
+        tr = np.zeros((Bp,), np.int32)
+        tr[:B] = (idx // PC).astype(np.int32)
+        if kind == "flat":
+            pids_p = np.full((Bp,), POLICY_IDS["lru"], np.int32)
+            pids_p[:B] = pids[idx]
+            ways_p = np.ones((Bp,), np.int32)
+            ways_p[:B] = ways_b[idx]
+            # the template fixes only the SHARD's row count and layout;
+            # policy identity/capacity come from the sharded masks operand
+            tmpl = FlatCore(
+                pids=(POLICY_IDS["lru"],) * k, ways=(1,) * k,
+                num_sets=num_sets, lanes=W, use_kernel=use_kernel,
+            )
+            state0 = FlatCore(
+                pids=tuple(int(p) for p in pids_p),
+                ways=tuple(int(w) for w in ways_p),
+                num_sets=num_sets, lanes=W, use_kernel=use_kernel,
+            ).init()
+            aux = _make_masks(pids_p, ways_p, W)
+            aux_spec = _GridMasks(
+                lru_or_fifo=PartitionSpec(sharding.ROWS_AXIS, None),
+                lfu=PartitionSpec(sharding.ROWS_AXIS, None),
+                awrp_row=rows_p,
+                fifo_row=rows_p,
+                dead=PartitionSpec(sharding.ROWS_AXIS, None),
+                iota=PartitionSpec(None, None),
+            )
+        else:
+            caps_p = np.ones((Bp,), np.int32)
+            caps_p[:B] = ways_b[idx]
+            tmpl = AdaptiveCore(
+                kind=kind, caps=(maxW,) * k, num_sets=num_sets, lanes=L,
+                renorm_at=renorm_at,
+            )
+            state0 = init_adaptive_state(Bp, num_sets, L)
+            aux = jnp.asarray(caps_p)
+            aux_spec = rows_p
+        operands.extend([state0, aux, jnp.asarray(tr)])
+        specs_in.extend([sharding.state_spec(state0), aux_spec, rows_p])
+        group_meta.append((kind, tmpl, B))
+
+    add_group("flat", simple_idx)
+    add_group("arc", arc_idx)
+    add_group("car", car_idx)
+
+    def run(*ops):
+        xs_l = ops[3 * len(group_meta)]
+
+        def step(carry, block_n):
+            new_states, outs = [], []
+            for g, (kind, tmpl, _) in enumerate(group_meta):
+                ids = block_n[ops[3 * g + 2]]
+                if kind == "flat":
+                    st, h = tmpl.on_access(carry[g], ids, masks=ops[3 * g + 1])
+                else:
+                    st, h = tmpl.on_access(carry[g], ids, caps=ops[3 * g + 1])
+                new_states.append(st)
+                outs.append(h)
+            return tuple(new_states), tuple(outs)
+
+        carry0 = tuple(ops[3 * g] for g in range(len(group_meta)))
+        _, hits = jax.lax.scan(step, carry0, xs_l, unroll=unroll)
+        return hits
+
+    hits = shard_map(
+        run,
+        mesh=mesh,
+        in_specs=tuple(specs_in) + (PartitionSpec(None, None),),
+        out_specs=tuple(
+            PartitionSpec(None, sharding.ROWS_AXIS) for _ in group_meta
+        ),
+        check_rep=False,
+    )(*operands, xs)
+    return jnp.concatenate(
+        [h[:, :B] for h, (_, _, B) in zip(hits, group_meta)], axis=1
+    )
 
 
 def simulate_trace_batched(
@@ -340,6 +484,7 @@ def simulate_trace_batched(
     num_sets: int = 1,
     use_kernel: bool | None = None,
     unroll: int = 1,
+    mesh=None,
     _renorm_at: Optional[int] = None,
 ) -> jax.Array:
     """Run the full (trace, policy, capacity) grid as ONE jitted program.
@@ -361,6 +506,16 @@ def simulate_trace_batched(
         per-step overhead the inline bit-pattern min-reduction avoids.
         Decisions are identical either way (property-tested).
       unroll: ``lax.scan`` unroll factor.
+      mesh: optional ``jax.sharding.Mesh`` with a ``"rows"`` axis
+        (``core.sharding.rows_mesh``): the flattened (trace, policy,
+        capacity) grid axis is sharded across its devices via ``shard_map``
+        — each device scans only its own rows (groups pad to a device-count
+        multiple internally), with zero per-step collectives, so
+        mixed-capacity sweeps scale with the number of devices backed by
+        real cores.  The step functions are row-local (no cross-row
+        reductions), so decisions are bit-identical to the unsharded
+        engine — property-tested in tests/test_sharding.py.  ``None``
+        (default) runs unsharded.
       _renorm_at: test hook — override the adaptive stamp-renormalization
         threshold (forcing frequent renormalizations); None picks it
         automatically (and elides the check entirely for traces short
@@ -413,6 +568,7 @@ def simulate_trace_batched(
         bool(use_kernel),
         int(unroll),
         renorm_at,
+        mesh,
     )
 
 

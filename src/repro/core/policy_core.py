@@ -54,6 +54,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sharding
+
 __all__ = [
     "INT_MAX",
     "JAX_POLICIES",
@@ -608,12 +610,15 @@ class _Accounting:
     paths).  This holds for every device policy because none of them evicts
     on a hit and every miss inserts."""
 
-    def init_counters(self) -> RowCounters:
+    def init_counters(self, *, mesh=None) -> RowCounters:
         """Fresh all-zero counters for this core's ``rows`` (device arrays);
-        pure — allocates new arrays, mutates nothing."""
+        pure — allocates new arrays, mutates nothing.  ``mesh`` places the
+        rows axis across a ``core.sharding`` rows mesh (rows must divide the
+        device count), matching a state built with ``init(mesh=...)``."""
         z = jnp.zeros((self.rows,), dtype=jnp.int32)
         p = jnp.zeros((self.rows,), dtype=jnp.float32)
-        return RowCounters(hits=z, misses=z, evictions=z, pressure=p)
+        counters = RowCounters(hits=z, misses=z, evictions=z, pressure=p)
+        return sharding.shard_rows(self, counters, mesh)
 
     def on_access_counted(
         self,
@@ -794,25 +799,39 @@ class FlatCore(_Accounting):
             return jnp.sum(occ & live, axis=-1, dtype=jnp.int32)
         return jnp.sum(occ & live[:, None, :], axis=(-2, -1), dtype=jnp.int32)
 
-    def init(self) -> FlatState:
-        """Fresh empty ``FlatState`` for this spec (pure; new arrays)."""
+    def init(self, *, mesh=None) -> FlatState:
+        """Fresh empty ``FlatState`` for this spec (pure; new arrays).
+        ``mesh`` places the rows axis across a ``core.sharding`` rows mesh
+        (rows must divide the device count; see ``sharding.pad_rows_to``)."""
         B, S, W = self.rows, self.num_sets, self.W
         shape = (B, W) if S == 1 else (B, S, W)
-        return FlatState(
+        state = FlatState(
             blocks=jnp.full(shape, -1, dtype=jnp.int32),
             f=jnp.zeros(shape, dtype=jnp.int32),
             r=jnp.zeros(shape, dtype=jnp.int32),
             clock=jnp.zeros(shape[:-1], dtype=jnp.int32),
         )
+        return sharding.shard_rows(self, state, mesh)
 
     def on_access(
-        self, state: FlatState, ids: jax.Array, *, active: jax.Array | None = None
+        self,
+        state: FlatState,
+        ids: jax.Array,
+        *,
+        active: jax.Array | None = None,
+        masks: _GridMasks | None = None,
     ) -> Tuple[FlatState, jax.Array]:
         """One access per row.  ``ids`` (rows,) int32 block ids; ``active``
         optionally masks rows to no-ops.  Decisions are bit-identical to the
-        host oracles (the parity suites are the contract)."""
+        host oracles (the parity suites are the contract).
+
+        ``masks`` overrides the spec-derived per-row constants; sharded
+        callers (``jax_policies`` under a rows mesh) pass each device's
+        slice of the grid masks so the step stays shard-local — the spec's
+        own ``pids``/``ways`` then only fix the shard's row count/layout."""
         ids = jnp.asarray(ids, dtype=jnp.int32)
-        masks = self._masks()
+        if masks is None:
+            masks = self._masks()
         bidx = jnp.arange(self.rows)
         if self.num_sets == 1:
             # single-set layout: (B, W) planes, no sets axis (see FlatState)
@@ -917,22 +936,39 @@ class AdaptiveCore(_Accounting):
         plus ghosts."""
         return self.lanes if self.lanes is not None else 2 * max(self.caps)
 
-    def init(self) -> AdaptiveState:
-        """Fresh empty ``AdaptiveState`` for this spec (pure; new arrays)."""
-        return init_adaptive_state(self.rows, self.num_sets, self.L)
+    def init(self, *, mesh=None) -> AdaptiveState:
+        """Fresh empty ``AdaptiveState`` for this spec (pure; new arrays).
+        ``mesh`` places the rows axis across a ``core.sharding`` rows mesh
+        (rows must divide the device count; see ``sharding.pad_rows_to``)."""
+        state = init_adaptive_state(self.rows, self.num_sets, self.L)
+        return sharding.shard_rows(self, state, mesh)
 
     def on_access(
-        self, state: AdaptiveState, ids: jax.Array, *, active: jax.Array | None = None
+        self,
+        state: AdaptiveState,
+        ids: jax.Array,
+        *,
+        active: jax.Array | None = None,
+        caps: jax.Array | None = None,
     ) -> Tuple[AdaptiveState, jax.Array]:
         """One ARC/CAR access per row; mirrors the host oracles decision-for-
         decision (float32 p, int truncation, LRU/clock-hand by min-stamp).
-        Stamps renormalize automatically when ``ctr`` nears int32 range."""
+        Stamps renormalize automatically when ``ctr`` nears int32 range.
+
+        ``caps`` overrides the spec's per-row capacities with a ``(rows,)``
+        runtime array; sharded callers pass each device's slice so the step
+        stays shard-local (the spec's static ``caps`` then only fix the
+        shard's row count and lane padding)."""
         ids = jnp.asarray(ids, dtype=jnp.int32)
         if self.renorm_at is not None:
             state = _renorm_stamps(state, self.renorm_at)
         L = self.L
         iota_l = jnp.arange(L, dtype=jnp.int32)[None, :]
-        cap = jnp.asarray(self.caps, dtype=jnp.int32)
+        cap = (
+            jnp.asarray(self.caps, dtype=jnp.int32)
+            if caps is None
+            else jnp.asarray(caps, dtype=jnp.int32)
+        )
         if self.num_sets == 1:
             # single-set fast path: cheap squeeze/expand instead of the
             # gather/scatter (the scan body is dispatch-bound on CPU)
@@ -1046,12 +1082,15 @@ def make_core(
 
 
 def init(
-    policy: str, rows: int = 1, num_sets: int = 1, ways: int = 1, **kw
+    policy: str, rows: int = 1, num_sets: int = 1, ways: int = 1,
+    *, mesh=None, **kw
 ) -> Tuple[PolicyCore, PolicyState]:
     """Protocol entry point: build the core for ``policy`` and its initial
-    state in one call — ``core, state = init(policy, rows, sets, ways)``."""
+    state in one call — ``core, state = init(policy, rows, sets, ways)``.
+    ``mesh`` (a ``core.sharding`` rows mesh) places the state's rows axis
+    across devices; rows must divide the device count."""
     core = make_core(policy, rows, num_sets, ways, **kw)
-    return core, core.init()
+    return core, core.init(mesh=mesh)
 
 
 @functools.lru_cache(maxsize=None)

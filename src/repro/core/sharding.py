@@ -1,0 +1,147 @@
+"""Mesh sharding for the policy core's rows axis (DESIGN.md §4).
+
+Every policy state in the repo — ``FlatState``/``AdaptiveState`` planes, the
+tenancy manager's tenant rows, per-sequence paged-KV pools, the sweep
+engine's (trace, policy, capacity) grid — is a pytree whose leaves carry one
+leading *rows* axis of independent policy instances.  The step functions in
+``repro.core.policy_core`` are row-local by construction (the "no cross-row
+reductions" invariant: every reduction runs over the lane/set axes, every
+scatter uses per-row indices), so sharding the rows axis over a device mesh
+partitions the whole program with ZERO per-step collectives: each device
+steps its own rows and the only communication is the caller's final gather.
+Decisions are bit-identical to the unsharded path — partitioning never
+changes per-row arithmetic — and the parity suites in
+``tests/test_sharding.py`` pin that on 1, 2 and 8 devices.
+
+Layer contents:
+
+* ``rows_mesh(n)`` — a 1-D mesh over the ``"rows"`` axis (host-platform CPU
+  devices stand in for TPUs under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``; see
+  ``tools/run_sharded_smoke.py``).
+* ``state_spec(state)`` / ``state_sharding(mesh, state)`` — the
+  ``PartitionSpec`` / ``NamedSharding`` pytree for any policy-state pytree:
+  rows on the mesh axis, lanes/sets/scalars replicated within each row
+  shard.
+* ``shard_rows(core, state, mesh)`` — the entry point: place an existing
+  state (and optionally its ``RowCounters``) across the mesh.
+* ``constrain_rows(state, mesh)`` — the jit-interior form
+  (``with_sharding_constraint``); GSPMD pads uneven rows-per-device
+  automatically (DESIGN.md §4).  Kept for GSPMD-style callers — the sweep
+  engine itself runs its grid under ``shard_map`` instead
+  (``jax_policies._sharded_groups_scan``), which measured faster because
+  scatters and adaptive control flow stay shard-local (DESIGN.md §4.2).
+
+``mesh=None`` everywhere means "unsharded" and is a strict no-op, so every
+caller can thread an optional mesh without forking its code path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "ROWS_AXIS",
+    "rows_mesh",
+    "leaf_spec",
+    "state_spec",
+    "state_sharding",
+    "shard_rows",
+    "constrain_rows",
+    "pad_rows_to",
+    "device_count",
+]
+
+#: the one mesh axis name this layer shards over.  Every policy-state leaf
+#: puts its leading rows axis here; all other axes stay replicated.
+ROWS_AXIS = "rows"
+
+
+def device_count() -> int:
+    """Number of addressable devices (the max useful ``rows_mesh`` size)."""
+    return len(jax.devices())
+
+
+def rows_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """A 1-D device mesh over the ``"rows"`` axis.
+
+    ``n_devices`` defaults to every addressable device; pass a smaller
+    count to benchmark scaling (the first ``n_devices`` devices are used).
+    Pure — builds a Mesh object, moves no data."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_devices {n} not in [1, {len(devs)}]")
+    return Mesh(devs[:n], (ROWS_AXIS,))
+
+
+def leaf_spec(leaf) -> PartitionSpec:
+    """``PartitionSpec`` for one state leaf: rows (axis 0) on the mesh,
+    every trailing axis (sets / lanes / ways) replicated."""
+    ndim = getattr(leaf, "ndim", None)
+    if ndim is None:
+        ndim = len(leaf.shape)
+    if ndim == 0:
+        return PartitionSpec()
+    return PartitionSpec(ROWS_AXIS, *([None] * (ndim - 1)))
+
+
+def state_spec(state):
+    """The ``PartitionSpec`` pytree for a policy-state pytree (one spec per
+    leaf, each sharding only the leading rows axis)."""
+    return jax.tree.map(leaf_spec, state)
+
+
+def state_sharding(mesh: Mesh, state):
+    """The ``NamedSharding`` pytree for ``state`` on ``mesh``."""
+    return jax.tree.map(lambda l: NamedSharding(mesh, leaf_spec(l)), state)
+
+
+def shard_rows(core, state, mesh: Optional[Mesh], counters=None):
+    """Place ``state`` (a ``FlatState``/``AdaptiveState``/any rows-leading
+    pytree built for ``core``) across ``mesh``'s rows axis.
+
+    The jit-boundary entry point: uses ``jax.device_put``, which requires
+    the rows axis to divide the mesh evenly — pad the core's rows (e.g.
+    ``pad_rows_to``) or use the jit-interior ``constrain_rows`` (GSPMD
+    pads) when it doesn't.  ``mesh=None`` returns the inputs unchanged.
+    Pass ``counters`` (a ``RowCounters``) to place the accounting planes
+    with the same row partitioning; returns ``(state, counters)`` then.
+
+    Decisions after sharding are bit-identical to before — the core's step
+    functions are row-local (see module docstring)."""
+    del core  # placement depends only on the pytree's shapes
+    if mesh is not None:
+        state = jax.device_put(state, state_sharding(mesh, state))
+        if counters is not None:
+            counters = jax.device_put(
+                counters, state_sharding(mesh, counters)
+            )
+    return state if counters is None else (state, counters)
+
+
+def constrain_rows(state, mesh: Optional[Mesh]):
+    """Jit-interior counterpart of ``shard_rows``:
+    ``with_sharding_constraint`` every leaf's rows axis onto ``mesh``.
+
+    Safe for uneven rows-per-device (GSPMD pads the last shard — the
+    empirically verified DESIGN.md §4 rule), unlike the jit-boundary
+    ``shard_rows``.  The sweep engine does NOT use this: its grid runs
+    under ``shard_map`` with explicitly padded groups, which measured
+    faster than the GSPMD-constrained scan (DESIGN.md §4.2).
+    ``mesh=None`` is the identity."""
+    if mesh is None:
+        return state
+    return jax.lax.with_sharding_constraint(state, state_sharding(mesh, state))
+
+
+def pad_rows_to(n_rows: int, n_devices: int) -> int:
+    """Smallest multiple of ``n_devices`` >= ``n_rows`` — the padded rows
+    count jit-boundary placement needs (``shard_rows``); the extra rows are
+    masked dead by callers (``active=False`` accesses are bit-exact no-ops)."""
+    if n_rows <= 0 or n_devices <= 0:
+        raise ValueError(f"need positive rows/devices, got {n_rows}/{n_devices}")
+    return -(-n_rows // n_devices) * n_devices

@@ -44,7 +44,9 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core import sharding
 from repro.cache import paged_kv
 from repro.cache.paged_kv import AdaptivePagedPool
 from repro.cache.prefix_cache import PrefixCache
@@ -120,13 +122,19 @@ class ServeEngine:
                  prefix_policy: str = "awrp", expert_cache=None, seed: int = 0,
                  tenants: Optional[Dict[str, int]] = None,
                  admission: Optional[AdmissionController] = None,
-                 auto_rebalance: bool = False, jit_loop: bool = True):
+                 auto_rebalance: bool = False, jit_loop: bool = True,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.kv_mode = kv_mode
         self.tenants = dict(tenants) if tenants else None
         self.auto_rebalance = bool(auto_rebalance)
+        #: optional core.sharding rows mesh: KV caches (and the tenant rows)
+        #: are placed across it by their batch axis, and the donated decode
+        #: loop then keeps the buffers device-resident under that placement
+        #: for its whole scan (donation reuses the sharded buffers in place)
+        self.mesh = mesh
         if self.tenants is None:
             # prefix_policy may be a name or a prebuilt policy instance —
             # both resolve through the unified factory inside PrefixCache
@@ -135,7 +143,9 @@ class ServeEngine:
             self.admission = None
         else:
             self.prefix_cache = None
-            self.tenant_cache = TenantPrefixCache(self.tenants, prefix_policy)
+            self.tenant_cache = TenantPrefixCache(
+                self.tenants, prefix_policy, mesh=mesh
+            )
             self.admission = admission or AdmissionController()
         #: optional ExpertCacheRuntime the model's MoE router reports into
         self.expert_cache = expert_cache
@@ -414,6 +424,34 @@ class ServeEngine:
         donated loop) and on hit (an entry can be hit again)."""
         return jax.tree.map(jnp.array, caches)
 
+    def _shard_caches(self, caches, batch: int):
+        """Place every cache leaf's batch axis across ``self.mesh``.
+
+        Unit-position leaves are stacked with a leading ``(n_repeats,)``
+        dim, so the batch axis is detected per leaf (axis 0 elsewhere,
+        axis 1 there); scalars such as ``pos`` and any leaf without a
+        batch-sized axis are left replicated.  No-op without a mesh or
+        when ``batch`` does not divide the device count (NamedSharding
+        placement requires even division — see ``core.sharding``)."""
+        if self.mesh is None or batch % self.mesh.devices.size:
+            return caches
+        mesh = self.mesh
+
+        def place(x):
+            if not hasattr(x, "ndim") or x.ndim == 0:
+                return x
+            if x.shape[0] == batch:
+                spec = PartitionSpec(
+                    sharding.ROWS_AXIS, *([None] * (x.ndim - 1)))
+            elif x.ndim >= 2 and x.shape[1] == batch:
+                spec = PartitionSpec(
+                    None, sharding.ROWS_AXIS, *([None] * (x.ndim - 2)))
+            else:
+                return x
+            return jax.device_put(x, NamedSharding(mesh, spec))
+
+        return jax.tree.map(place, caches)
+
     def _run_bucket(self, plen: int, reqs: List[Request]) -> Dict[int, Result]:
         t0 = time.time()
         prompts = [r.prompt for r in reqs]
@@ -442,6 +480,7 @@ class ServeEngine:
                 )
                 self._insert_prefix(reqs[0], payload)
 
+        caches = self._shard_caches(caches, len(reqs))
         if self.jit_loop:
             loop = self._get_loop(max_new, reqs[0].temperature)
             gen_dev, caches, self.key = loop(

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sharding
 from repro.core.policy_core import (
     ADAPTIVE_POLICIES,
     ADMIT_SHED,
@@ -79,6 +80,15 @@ class TenantCacheManager:
     device policy name (flat: awrp/lru/fifo/lfu; adaptive: arc/car).  Flat
     cores pad every row to ``lanes = sum(quotas)`` so rebalancing can grow
     any tenant up to the whole pool without changing plane shapes.
+
+    ``mesh`` (a ``core.sharding`` rows mesh) places the tenant rows across
+    devices: state and counters are built with the rows axis sharded, and
+    every jitted step (``access`` / ``access_stream`` / ``decide_batch``)
+    then runs under the mesh.  Tenant counts rarely divide the device
+    count, so the core pads its rows up to a multiple
+    (``sharding.pad_rows_to``) with minimum-quota rows no access ever
+    activates — masked no-ops keep them empty, so accounting and decisions
+    are bit-identical to the unsharded manager (tests/test_sharding.py).
     """
 
     def __init__(
@@ -87,6 +97,7 @@ class TenantCacheManager:
         policy: str = "awrp",
         *,
         pressure_alpha: float = 0.1,
+        mesh=None,
     ):
         if not quotas:
             raise ValueError("need at least one tenant")
@@ -98,25 +109,34 @@ class TenantCacheManager:
         self.policy_name = policy
         self.quotas = {t: int(q) for t, q in quotas.items()}
         self.pressure_alpha = float(pressure_alpha)
+        self.mesh = mesh
+        self._core_rows = (
+            sharding.pad_rows_to(len(self.tenants), mesh.devices.size)
+            if mesh is not None
+            else len(self.tenants)
+        )
         # host mirror of the device pressure plane (RowCounters.pressure).
         # Always a PULLED writable copy, never recomputed host-side: XLA's
         # FMA contraction makes a host float32 replay of the EWMA diverge
         # within a few steps, and admission bit-identity (host decide vs
         # device decide_batch) depends on both reading the same bits.
-        self._pressure = np.zeros(len(self.tenants), dtype=np.float32)
+        self._pressure = np.zeros(self._core_rows, dtype=np.float32)
         # tenant-altitude AWRP metadata for ranking: F_t / R_t / clock N
         self._tf = np.zeros(len(self.tenants), dtype=np.int64)
         self._tr = np.zeros(len(self.tenants), dtype=np.int64)
         self._tclock = 0
         self.core = self._build_core()
-        self.state = self.core.init()
-        self.counters: RowCounters = self.core.init_counters()
+        self.state = self.core.init(mesh=mesh)
+        self.counters: RowCounters = self.core.init_counters(mesh=mesh)
         self._step = self._jit_step()
 
     # -- core mount ---------------------------------------------------------
     @property
     def rows(self) -> int:
-        """Number of core rows == number of tenants (static per manager)."""
+        """Number of tenant rows (static per manager).  Under a mesh the
+        core itself may carry extra never-activated padding rows —
+        ``self.core.rows >= rows`` — so array-shaped ops use the core's
+        count while tenant iteration uses this one."""
         return len(self.tenants)
 
     @property
@@ -126,6 +146,9 @@ class TenantCacheManager:
 
     def _build_core(self):
         q = tuple(self.quotas[t] for t in self.tenants)
+        # mesh padding: rows beyond the tenant count are minimum-quota rows
+        # no access ever activates, so they stay empty and unaccounted
+        q += (1,) * (self._core_rows - len(q))
         if self.policy_name in JAX_POLICIES:
             return FlatCore(
                 pids=(POLICY_IDS[self.policy_name],) * len(q),
@@ -186,8 +209,8 @@ class TenantCacheManager:
         ``access_stream`` for throughput."""
         r = self.row(tenant)
         before = self._resident_ids(self.state, r)
-        active = jnp.arange(self.rows) == r
-        ids = jnp.full((self.rows,), int(key), dtype=jnp.int32)
+        active = jnp.arange(self.core.rows) == r
+        ids = jnp.full((self.core.rows,), int(key), dtype=jnp.int32)
         self.state, self.counters, hit = self._step(
             self.state, self.counters, ids, active
         )
@@ -218,7 +241,7 @@ class TenantCacheManager:
                 f"tenant_rows {tenant_rows.shape} and keys {keys.shape} must "
                 "be equal-length 1-D arrays"
             )
-        core, R = self.core, self.rows
+        core, R = self.core, self.core.rows
         alpha = self.pressure_alpha
         ctr_before = jax.tree.map(np.asarray, self.counters)
 
@@ -243,7 +266,7 @@ class TenantCacheManager:
         d_acc = (ctr_after.hits + ctr_after.misses) - (
             ctr_before.hits + ctr_before.misses
         )
-        for r in range(R):
+        for r in range(self.rows):
             self._tf[r] += int(d_acc[r])
         base = self._tclock
         self._tclock += len(tenant_rows)
@@ -275,7 +298,7 @@ class TenantCacheManager:
         Mutates the device pressure plane (``admission_decay`` on this
         tenant's row) and refreshes the host mirror."""
         r = self.row(tenant)
-        mask = np.zeros(self.rows, dtype=bool)
+        mask = np.zeros(self.core.rows, dtype=bool)
         mask[r] = True
         self.counters = self.counters._replace(
             pressure=admission_decay(
@@ -494,7 +517,7 @@ class AdmissionController:
             self.shed_at,
             self.warmup,
             manager.pressure_alpha,
-            manager.rows,
+            manager.core.rows,
         )
         acc = manager.counters.hits + manager.counters.misses
         codes, new_p = fn(manager.counters.pressure, acc, jnp.asarray(rows))

@@ -1,0 +1,209 @@
+"""Mesh-sharded policy core parity suite (core.sharding, DESIGN.md §4).
+
+The tentpole invariant: placing the rows axis across a device mesh is
+DECISION-INVARIANT — every hit bit, every ``RowCounters`` field, every
+state plane bit-identical to the unsharded run, for flat AND adaptive
+cores, on 1/2/8 devices, including the sweep engine's uneven
+rows-per-device group padding and the tenancy manager's padded tenant
+rows.
+
+Multi-device cases need forced XLA host devices: run through
+``tools/run_sharded_smoke.py`` or under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+multi-device job).  On a plain 1-device install those cases skip and the
+``mesh(1)`` cases keep the parity contract covered in tier-1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import paged_kv
+from repro.core import policy_core, sharding
+from repro.core.jax_policies import DEVICE_POLICIES, simulate_trace_batched
+from repro.core.traces import trace_multi_tenant, trace_zipf
+from repro.serve.tenancy import AdmissionController, TenantCacheManager
+
+MESH_SIZES = (1, 2, 8)
+
+
+def _mesh_or_skip(n: int):
+    if n > sharding.device_count():
+        pytest.skip(f"needs {n} XLA host devices "
+                    f"(have {sharding.device_count()}; see "
+                    f"tools/run_sharded_smoke.py)")
+    return sharding.rows_mesh(n)
+
+
+def _replay(policy: str, mesh, *, rows=8, ways=4, steps=60, seed=3):
+    """Jitted per-step replay of a random multi-row stream through
+    ``on_access_counted``; returns (hit bits, counters, final state) as
+    host arrays.  Half the steps mask a row subset so inactive-row
+    freezing is exercised under sharding too."""
+    core, state = policy_core.init(policy, rows=rows, ways=ways, mesh=mesh)
+    counters = core.init_counters(mesh=mesh)
+    step = jax.jit(core.on_access_counted)
+    rng = np.random.RandomState(seed)
+    ids_seq = rng.randint(0, 3 * ways, size=(steps, rows))
+    act_seq = rng.rand(steps, rows) < 0.7
+    act_seq[::2] = True
+    hits = []
+    for ids, act in zip(ids_seq, act_seq):
+        state, counters, hit = step(
+            state, counters, jnp.asarray(ids, jnp.int32),
+            active=jnp.asarray(act))
+        hits.append(np.asarray(hit))
+    return (np.array(hits), jax.tree.map(np.asarray, counters),
+            jax.tree.map(np.asarray, state))
+
+
+def _assert_trees_equal(a, b, what):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# core parity: decisions AND RowCounters telemetry, flat and adaptive
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_dev", MESH_SIZES)
+@pytest.mark.parametrize("policy", ["awrp", "lru", "fifo", "lfu"])
+def test_flat_core_sharded_replay_is_bit_identical(policy, n_dev):
+    mesh = _mesh_or_skip(n_dev)
+    base = _replay(policy, None)
+    got = _replay(policy, mesh)
+    np.testing.assert_array_equal(got[0], base[0], err_msg="hit bits")
+    _assert_trees_equal(got[1], base[1], f"{policy} RowCounters")
+    _assert_trees_equal(got[2], base[2], f"{policy} final state")
+
+
+@pytest.mark.parametrize("n_dev", MESH_SIZES)
+@pytest.mark.parametrize("policy", ["arc", "car"])
+def test_adaptive_core_sharded_replay_is_bit_identical(policy, n_dev):
+    mesh = _mesh_or_skip(n_dev)
+    base = _replay(policy, None)
+    got = _replay(policy, mesh)
+    np.testing.assert_array_equal(got[0], base[0], err_msg="hit bits")
+    _assert_trees_equal(got[1], base[1], f"{policy} RowCounters")
+    _assert_trees_equal(got[2], base[2], f"{policy} final state")
+
+
+# ---------------------------------------------------------------------------
+# sweep engine parity: full six-policy grid, uneven group padding, num_sets
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_dev", MESH_SIZES)
+def test_sweep_grid_sharded_is_bit_identical(n_dev):
+    mesh = _mesh_or_skip(n_dev)
+    tr = trace_zipf(2_000, 300, 0.9, seed=7)
+    caps = [30, 60]
+    base = np.asarray(simulate_trace_batched(tr, DEVICE_POLICIES, caps))
+    got = np.asarray(
+        simulate_trace_batched(tr, DEVICE_POLICIES, caps, mesh=mesh))
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("n_dev", (2, 8))
+def test_sweep_uneven_group_padding_is_bit_identical(n_dev):
+    """5 capacities: the flat group has 4*5=20 rows and each adaptive group
+    5 — neither divides 8, so the internal ``pad_rows_to`` padding carries
+    real traffic on pad rows whose outputs must be sliced away exactly."""
+    mesh = _mesh_or_skip(n_dev)
+    tr = trace_zipf(2_000, 300, 0.9, seed=9)
+    caps = [7, 13, 30, 60, 90]
+    base = np.asarray(simulate_trace_batched(tr, DEVICE_POLICIES, caps))
+    got = np.asarray(
+        simulate_trace_batched(tr, DEVICE_POLICIES, caps, mesh=mesh))
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("n_dev", (2, 8))
+def test_sweep_multiset_sharded_is_bit_identical(n_dev):
+    mesh = _mesh_or_skip(n_dev)
+    tr = trace_zipf(1_500, 300, 0.9, seed=11)
+    base = np.asarray(
+        simulate_trace_batched(tr, DEVICE_POLICIES, [16, 32], num_sets=2))
+    got = np.asarray(
+        simulate_trace_batched(
+            tr, DEVICE_POLICIES, [16, 32], num_sets=2, mesh=mesh))
+    np.testing.assert_array_equal(got, base)
+
+
+# ---------------------------------------------------------------------------
+# tenancy: padded tenant rows, telemetry and batched admission parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_dev", MESH_SIZES)
+@pytest.mark.parametrize("policy", ["awrp", "car"])
+def test_tenant_manager_sharded_is_bit_identical(policy, n_dev):
+    """3 tenants on n devices: core rows pad 3 -> 4/8 with min-quota rows
+    no access activates.  Hit stream, per-row telemetry and the batched
+    admission decisions must match the unsharded manager exactly."""
+    mesh = _mesh_or_skip(n_dev)
+    quotas = {"alpha": 4, "beta": 7, "gamma": 3}
+    tenant_rows, addrs = trace_multi_tenant(
+        500, n_tenants=3, working_set=40, seed=13)
+    addrs = addrs % 1000
+
+    base = TenantCacheManager(quotas, policy)
+    got = TenantCacheManager(quotas, policy, mesh=mesh)
+    h0 = base.access_stream(tenant_rows, addrs)
+    h1 = got.access_stream(tenant_rows, addrs)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h0))
+    t0, t1 = base.row_telemetry(), got.row_telemetry()
+    for k in ("hits", "misses", "evictions", "pressure"):
+        np.testing.assert_array_equal(
+            np.asarray(t1[k])[:3], np.asarray(t0[k])[:3], err_msg=k)
+
+    adm = AdmissionController(defer_at=0.2, shed_at=0.5, warmup=0)
+    batch = ["beta", "gamma", "beta", "alpha", "gamma", "beta"]
+    assert adm.decide_batch(got, batch) == adm.decide_batch(base, batch)
+
+
+# ---------------------------------------------------------------------------
+# paged KV pools: sharded constructors allocate identical pytrees
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_dev", (1, 2, 8))
+def test_paged_pool_sharded_init_matches_unsharded(n_dev):
+    mesh = _mesh_or_skip(n_dev)
+    base = paged_kv.init_adaptive_pool(8, 4, 2, 3, jnp.float32, "car")
+    got = paged_kv.init_adaptive_pool(
+        8, 4, 2, 3, jnp.float32, "car", mesh=mesh)
+    _assert_trees_equal(got, base, "adaptive pool init")
+    # and the pool's per-sequence policy core decides identically when the
+    # planes are mesh-placed (page references are sequence-local)
+    core = paged_kv.adaptive_core("car", 8, 4)
+    s0, s1 = base.policy, got.policy
+    rng = np.random.RandomState(17)
+    for ids in rng.randint(0, 6, size=(25, 8)):
+        ids = jnp.asarray(ids, jnp.int32)
+        s0, hit0 = core.on_access(s0, ids)
+        s1, hit1 = core.on_access(s1, ids)
+        np.testing.assert_array_equal(np.asarray(hit1), np.asarray(hit0))
+    _assert_trees_equal(s1, s0, "pool policy state")
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def test_pad_rows_to_rounds_up_to_device_multiples():
+    assert sharding.pad_rows_to(3, 8) == 8
+    assert sharding.pad_rows_to(8, 8) == 8
+    assert sharding.pad_rows_to(9, 8) == 16
+    assert sharding.pad_rows_to(5, 1) == 5
+
+
+def test_shard_rows_without_mesh_is_identity():
+    core, state = policy_core.init("awrp", rows=4, ways=2)
+    assert sharding.shard_rows(core, state, None) is state

@@ -1,8 +1,10 @@
 """Docstring lint for the public serving surface (CI doc-checks job).
 
-Walks the packages listed in ``TARGETS`` and fails (exit 1, one line per
-violation) when a public module, class, function or method has no
-docstring.  "Public" means the name has no leading underscore and the
+Walks the packages listed in ``TARGETS`` — the serve/core/cache library
+surface plus the benchmark entry points (every ``benchmarks/*.py`` is a
+public artifact producer whose ``run``/helpers CI invokes) — and fails
+(exit 1, one line per violation) when a public module, class, function
+or method has no docstring.  "Public" means the name has no leading underscore and the
 object is defined at module or class level — nested helpers and
 underscore-private surface are exempt.  Keeps the state-mutation /
 jit-safety contracts (DESIGN.md §9) documented as the surface grows.
@@ -20,7 +22,8 @@ import pathlib
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-TARGETS = ("src/repro/serve", "src/repro/core", "src/repro/cache")
+TARGETS = ("src/repro/serve", "src/repro/core", "src/repro/cache",
+           "benchmarks")
 
 
 def _missing(tree: ast.Module, path: pathlib.Path):

@@ -1,0 +1,65 @@
+"""Multi-device smoke driver: run the sharded parity suite + sweep bench.
+
+Forces ``N`` XLA host devices (default 8) via
+``--xla_force_host_platform_device_count`` and then runs, in child
+processes so the flag is guaranteed to precede the first jax import:
+
+1. ``tests/test_sharding.py`` — the bit-identity property suite at the
+   forced device count (the multi-device cases that skip in plain tier-1
+   actually run here);
+2. ``benchmarks/run.py --sections sharded_sweep --smoke`` — the sweep
+   engine's parity gate + scaling record.
+
+Exit status is non-zero if either step fails — this is the command the CI
+``multi-device`` job runs, and the one to reproduce it locally::
+
+    python tools/run_sharded_smoke.py [--devices 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main(argv=None) -> int:
+    """Run both smoke steps at the forced device count; return the first
+    non-zero child exit status (0 if both pass)."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=8, metavar="N",
+                    help="XLA host device count to force (default 8)")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        flags = (f"{flags} --xla_force_host_platform_device_count="
+                 f"{args.devices}").strip()
+    env["XLA_FLAGS"] = flags
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p)
+
+    steps = [
+        ("sharded parity suite",
+         [sys.executable, "-m", "pytest", "-x", "-q",
+          os.path.join(REPO, "tests", "test_sharding.py")]),
+        ("sharded sweep bench (parity gate + scaling record)",
+         [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+          "--sections", "sharded_sweep", "--smoke"]),
+    ]
+    for name, cmd in steps:
+        print(f"\n== {name} ({args.devices} devices) ==", flush=True)
+        rc = subprocess.call(cmd, env=env, cwd=REPO)
+        if rc != 0:
+            print(f"FAILED: {name} (exit {rc})")
+            return rc
+    print(f"\nmulti-device smoke OK at {args.devices} devices")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
