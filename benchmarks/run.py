@@ -36,7 +36,8 @@ import traceback
 #: --sweep-json artifact and the later two merge into the record
 #: policy_overhead writes.
 SMOKE_SECTIONS = ("table1", "trace_suite", "policy_overhead", "tenancy",
-                  "sharded_sweep", "serve_loop", "kernel_bench")
+                  "sharded_sweep", "serve_loop", "kernel_bench",
+                  "policy_attn")
 
 
 def main(argv=None) -> None:
@@ -89,6 +90,7 @@ def main(argv=None) -> None:
         expert_cache_bench,
         grad_compress_bench,
         kernel_bench,
+        policy_attn_bench,
         policy_overhead,
         roofline_report,
         serve_loop_bench,
@@ -110,6 +112,10 @@ def main(argv=None) -> None:
             "Policy overhead + batched sweep engine (paper §3 overhead claim)",
             policy_overhead.run),
         "kernel_bench": ("Kernel bench", kernel_bench.run),
+        "policy_attn": (
+            "Fused policy-attention kernels (bit-identity + dispatch gate, "
+            "DESIGN.md §10)",
+            policy_attn_bench.run),
         "serve_policy": (
             "Paged-KV policy ablation (classic vs true-adaptive, "
             "identical decode traces)",

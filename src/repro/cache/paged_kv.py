@@ -558,6 +558,148 @@ def adaptive_score_update(
 
 
 # ---------------------------------------------------------------------------
+# fused decode: policy step + paged attention in ONE Pallas launch
+# ---------------------------------------------------------------------------
+
+
+def _scatter_new_token(pool: PagedPool, new_k, new_v, pos, page_size,
+                       slot, f, r, page_start, clock, open_slot) -> PagedPool:
+    """Apply the kernel's allocation decision to the K/V arrays — the same
+    zero-page + row-write ``insert_token`` performs, driven by the returned
+    ``slot`` (the kernel keeps the pool K/V read-only; see DESIGN.md §10)."""
+    B = pool.k.shape[0]
+    within = (pos % page_size).astype(jnp.int32)
+    need_alloc = within == 0
+    bidx = jnp.arange(B)
+    zero_row = jnp.zeros_like(pool.k[:, 0])
+    k = pool.k.at[bidx, slot].set(
+        jnp.where(need_alloc, zero_row, pool.k[bidx, slot]))
+    k = k.at[bidx, slot, within].set(new_k)
+    v = pool.v.at[bidx, slot].set(
+        jnp.where(need_alloc, zero_row, pool.v[bidx, slot]))
+    v = v.at[bidx, slot, within].set(new_v)
+    return PagedPool(k=k, v=v, f=f, r=r, page_start=page_start, clock=clock,
+                     open_slot=open_slot)
+
+
+def _shard_wrap(fn, mesh, batch: int, example_args, n_batch_args: int):
+    """Wrap a fused-kernel call in ``shard_map`` over the rows axis when a
+    mesh is given and the batch divides it (PR 7 contract: decisions are
+    row-local, so shard-local launches are bit-identical); identity
+    otherwise."""
+    if mesh is None or batch % mesh.devices.size:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    rows = PartitionSpec(sharding.ROWS_AXIS)
+    in_specs = tuple(
+        PartitionSpec(sharding.ROWS_AXIS, *(None,) * (x.ndim - 1))
+        for x in example_args[:n_batch_args]
+    ) + (PartitionSpec(None),)  # pos is replicated
+    outs = jax.eval_shape(fn, *example_args)
+    out_specs = jax.tree.map(
+        lambda s: rows if s.ndim == 1
+        else PartitionSpec(sharding.ROWS_AXIS, *(None,) * (s.ndim - 1)), outs)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def fused_decode_step(
+    pool: PagedPool,
+    q: jax.Array,  # (B, KVH, G, hd) decode-step queries
+    new_k: jax.Array,  # (B, kvd) new token K row
+    new_v: jax.Array,  # (B, kvd)
+    pos: jax.Array,  # scalar int32 token index
+    page_size: int,
+    policy: str = "awrp",
+    *,
+    mesh=None,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, PagedPool]:
+    """One flat-policy decode step as a single fused launch: equivalent to
+    ``insert_token`` + ``kernels.ops.paged_attention`` + ``score_update``
+    but with the policy arithmetic inside the attention kernel.  Returns
+    ``(out (B, KVH, G, hd), page_mass (B, P), new_pool)`` with decisions
+    bit-identical to the unfused chain.  Under ``mesh`` the kernel is
+    launched shard-locally via ``shard_map`` (PR 7 path preserved)."""
+    from repro.kernels import ops
+
+    B, P = pool.f.shape
+    KVH, G, hd = q.shape[1:]
+    kp = pool.k.reshape(B, P, page_size, KVH, hd)
+    vp = pool.v.reshape(B, P, page_size, KVH, hd)
+    nk = new_k.reshape(B, KVH, hd)
+    nv = new_v.reshape(B, KVH, hd)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def call(q, kp, vp, nk, nv, f, r, ps, clock, open_slot, pos1):
+        return ops.policy_paged_attention(
+            q, kp, vp, nk, nv, pos1, f, r, ps, clock, open_slot,
+            policy=policy, interpret=interpret)
+
+    args = (q, kp, vp, nk, nv, pool.f, pool.r, pool.page_start, pool.clock,
+            pool.open_slot, pos.reshape(1))
+    call = _shard_wrap(call, mesh, B, args, 10)
+    out, mass, slot, f2, r2, ps2, clock2, open2 = call(*args)
+    new_pool = _scatter_new_token(pool, new_k, new_v, pos, page_size,
+                                  slot, f2, r2, ps2, clock2, open2)
+    return out, mass, new_pool
+
+
+def fused_adaptive_decode_step(
+    apool: AdaptivePagedPool,
+    q: jax.Array,  # (B, KVH, G, hd)
+    new_k: jax.Array,  # (B, kvd)
+    new_v: jax.Array,  # (B, kvd)
+    pos: jax.Array,  # scalar int32
+    page_size: int,
+    core: AdaptiveCore,
+    *,
+    mesh=None,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, AdaptivePagedPool]:
+    """One TRUE-adaptive (arc/car) decode step as a single fused launch:
+    equivalent to ``adaptive_insert_token`` + paged attention +
+    ``adaptive_score_update`` — the rows=1 ``AdaptiveCore.on_access``
+    miss/hit passes run inside the kernel.  Returns ``(out, page_mass,
+    new_apool)`` with decisions AND adaptive planes bit-identical to the
+    unfused chain (hard-gated in tests + bench)."""
+    from repro.kernels import ops
+
+    pool, pstate = apool
+    B, P = pool.f.shape
+    KVH, G, hd = q.shape[1:]
+    L = pstate.blocks.shape[-1]
+    kp = pool.k.reshape(B, P, page_size, KVH, hd)
+    vp = pool.v.reshape(B, P, page_size, KVH, hd)
+    nk = new_k.reshape(B, KVH, hd)
+    nv = new_v.reshape(B, KVH, hd)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def call(q, kp, vp, nk, nv, f, r, ps, clock, open_slot,
+             blocks, tag, stamp, refbits, p_plane, ctr, pos1):
+        return ops.adaptive_policy_paged_attention(
+            q, kp, vp, nk, nv, pos1, f, r, ps, clock, open_slot,
+            blocks, tag, stamp, refbits, p_plane, ctr,
+            kind=core.kind, renorm_at=core.renorm_at, interpret=interpret)
+
+    args = (q, kp, vp, nk, nv, pool.f, pool.r, pool.page_start, pool.clock,
+            pool.open_slot, pstate.blocks[:, 0], pstate.tag[:, 0],
+            pstate.stamp[:, 0], pstate.ref[:, 0], pstate.p[:, 0],
+            pstate.ctr[:, 0], pos.reshape(1))
+    call = _shard_wrap(call, mesh, B, args, 16)
+    (out, mass, slot, f2, r2, ps2, clock2, open2,
+     blk2, tag2, stp2, ref2, pp2, ctr2) = call(*args)
+    new_pool = _scatter_new_token(pool, new_k, new_v, pos, page_size,
+                                  slot, f2, r2, ps2, clock2, open2)
+    new_state = AdaptiveState(
+        blocks=blk2[:, None], tag=tag2[:, None], stamp=stp2[:, None],
+        ref=ref2[:, None], p=pp2[:, None], ctr=ctr2[:, None])
+    return out, mass, AdaptivePagedPool(pool=new_pool, policy=new_state)
+
+
+# ---------------------------------------------------------------------------
 # simple full / ring-window caches (decode baselines)
 # ---------------------------------------------------------------------------
 

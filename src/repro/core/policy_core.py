@@ -320,13 +320,14 @@ def init_adaptive_state(batch: int, num_sets: int, lanes: int) -> AdaptiveState:
     )
 
 
-#: (4, 1, 1) broadcast constant for the stacked per-list count below
-_TAG_STACK = np.arange(_TAG_T1, _TAG_B2 + 1, dtype=np.int32)[:, None, None]
-
-
 def _list_counts(tag: jax.Array):
-    """Per-list (T1, T2, B1, B2) sizes as one stacked ``(4, R)`` reduction."""
-    return jnp.sum(tag[None] == _TAG_STACK, axis=-1)
+    """Per-list (T1, T2, B1, B2) sizes as one stacked ``(4, R)`` reduction.
+
+    The (4, 1, 1) tag stack is built with ``broadcasted_iota`` rather than a
+    module-level numpy constant so the whole step stays constant-free and can
+    be traced inside a ``pallas_call`` body (kernels/policy_attn.py)."""
+    stack = _TAG_T1 + jax.lax.broadcasted_iota(jnp.int32, (4, 1, 1), 0)
+    return jnp.sum(tag[None] == stack, axis=-1)
 
 
 def _keyed_head(tag: jax.Array, stamp: jax.Array, want: jax.Array) -> jax.Array:

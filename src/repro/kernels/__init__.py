@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: the compute hot-spots the serving path optimizes
+with custom TPU kernels, each with a pure-jnp reference twin.
+
+Layout (OPTIONAL layer — add <name>.py + ops.py + ref.py entries ONLY for
+genuine hot-spots the paper itself optimizes; keep it empty otherwise):
+
+* ``awrp_select.py`` — masked bit-packed weight-ranking victim select;
+* ``flash_attn.py``  — one-pass flash attention (prefill);
+* ``paged_attn.py``  — split-KV paged-attention decode over the page pool;
+* ``policy_attn.py`` — fused policy step + paged attention in one launch
+  (DESIGN.md §10);
+* ``ops.py``  — jitted public wrappers (single dispatch point, interpret
+  fallback off-TPU);
+* ``ref.py``  — pure-jnp references the kernels are property-tested against.
+"""

@@ -56,6 +56,11 @@ def awrp_select_kernel(
     *,
     interpret: bool = False,
 ) -> jax.Array:
+    """Per-row AWRP victim index: ``(B,)`` int32 first-index argmin of the
+    eq. (1) weight W = F/(N-R) over ``valid & ~pinned`` lanes, computed with
+    the bit-pattern min-reduction (no argmin).  Grid is ``(B,)``; call via
+    ``ops.awrp_select`` which pads P to the lane boundary and resolves the
+    interpret fallback off-TPU."""
     B, P = f.shape
     return pl.pallas_call(
         _kernel,

@@ -89,6 +89,12 @@ def flash_attention_kernel(
     kv_len: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
+    """One-pass flash attention over ``(block_q, block_k)`` tiles: grid
+    ``(B, KVH, Sq/block_q, Skv/block_k)`` with the key axis innermost and
+    sequential, carrying the running (m, l, acc) online-softmax state in
+    VMEM scratch.  Sequence lengths must already be padded to the block
+    sizes — call via ``ops.flash_attention``, which pads, masks with
+    ``kv_len``, and resolves the interpret fallback off-TPU."""
     B, Sq, KVH, G, hd = q.shape
     Skv = k.shape[1]
     kv_len = Skv if kv_len is None else kv_len

@@ -19,6 +19,10 @@ import jax.numpy as jnp
 from repro.kernels.awrp_select import awrp_select_kernel, awrp_select_rows_kernel
 from repro.kernels.flash_attn import flash_attention_kernel
 from repro.kernels.paged_attn import paged_attention_kernel
+from repro.kernels.policy_attn import (
+    adaptive_policy_paged_attention_kernel,
+    policy_paged_attention_kernel,
+)
 
 
 def _default_interpret() -> bool:
@@ -73,6 +77,57 @@ def paged_attention(q, k_pages, v_pages, page_start, cur_pos,
     return paged_attention_kernel(
         q, k_pages, v_pages, page_start.astype(jnp.int32),
         cur_pos.astype(jnp.int32), interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "interpret"))
+def policy_paged_attention(q, k_pages, v_pages, new_k, new_v, pos,
+                           f, r, page_start, clock, open_slot,
+                           *, policy: str,
+                           interpret: bool | None = None):
+    """One fused flat-policy (awrp/lru/fifo/lfu) decode step: victim
+    selection + in-tile KV insert + paged attention + F/R/clock score update
+    in a single Pallas launch.  Returns ``(out, page_mass, slot, f', r',
+    page_start', clock', open_slot')`` — see
+    ``kernels/policy_attn.py`` (DESIGN.md §10).  The caller scatters the new
+    token's K/V row into the pool at ``slot`` (the pool arrays stay
+    read-only kernel inputs); ``repro.cache.paged_kv.fused_decode_step``
+    wraps both halves."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return policy_paged_attention_kernel(
+        q, k_pages, v_pages, new_k, new_v,
+        pos.astype(jnp.int32).reshape(1),
+        f.astype(jnp.int32), r.astype(jnp.int32),
+        page_start.astype(jnp.int32), clock.astype(jnp.int32),
+        open_slot.astype(jnp.int32), policy=policy, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "renorm_at", "interpret"))
+def adaptive_policy_paged_attention(q, k_pages, v_pages, new_k, new_v, pos,
+                                    f, r, page_start, clock, open_slot,
+                                    blocks, tag, stamp, refbits, p_plane,
+                                    ctr, *, kind: str, renorm_at,
+                                    interpret: bool | None = None):
+    """One fused true-adaptive (arc/car) decode step: a rows=1
+    ``AdaptiveCore.on_access`` miss/hit pass runs inside the attention
+    launch.  Returns the flat outputs plus the six updated ``AdaptiveState``
+    planes; bit-identical to ``adaptive_insert_token`` +
+    ``adaptive_score_update`` (hard-gated in tests/test_policy_attn.py)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return adaptive_policy_paged_attention_kernel(
+        q, k_pages, v_pages, new_k, new_v,
+        pos.astype(jnp.int32).reshape(1),
+        f.astype(jnp.int32), r.astype(jnp.int32),
+        page_start.astype(jnp.int32), clock.astype(jnp.int32),
+        open_slot.astype(jnp.int32), blocks.astype(jnp.int32),
+        tag.astype(jnp.int32), stamp.astype(jnp.int32),
+        refbits.astype(jnp.int32), p_plane.astype(jnp.float32),
+        ctr.astype(jnp.int32), kind=kind, renorm_at=renorm_at,
+        interpret=interpret,
     )
 
 

@@ -381,6 +381,38 @@ def decode_attend(
     return proj, attn_mass
 
 
+def decode_q(
+    params: Params, x: jax.Array, cfg, *, position: jax.Array,
+    use_rope: bool = True
+) -> jax.Array:
+    """The query half of ``decode_attend`` alone — (B, 1, D) ->
+    (B, KVH, G, hd) grouped queries, RoPE'd at ``position`` — for the fused
+    policy-attention kernel path where attention itself happens in-kernel
+    (``paged_kv.fused_decode_step``)."""
+    B = x.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    q = q.reshape(B, 1, H, hd)
+    if use_rope:
+        pos = jnp.full((B, 1), position, dtype=jnp.int32)
+        q = rope(q, pos, cfg.rope_theta)
+    return q.reshape(B, KVH, H // KVH, hd)
+
+
+def decode_project_out(params: Params, out: jax.Array, cfg) -> jax.Array:
+    """The output half of ``decode_attend`` alone — kernel attention output
+    (B, KVH, G, hd) -> (B, 1, D) via the ``wo`` projection, with the same
+    logical sharding annotations as the unfused path."""
+    B = out.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    out = out.reshape(B, 1, H * hd)
+    out = logical_shard(out, "act_batch", "act_seq", "act_feat")
+    proj = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return proj
+
+
 # ---------------------------------------------------------------------------
 # MoE (sort-based dispatch, static capacity — GSPMD-friendly)
 # ---------------------------------------------------------------------------

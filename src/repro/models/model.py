@@ -478,7 +478,8 @@ def decode_caches(cfg, batch: int, max_len: int, *, kv_mode: str = "full",
 
 
 def _decode_block(kind: str, p: Params, x: jax.Array, cfg, cache, pos,
-                  win_positions, kv_mode: str):
+                  win_positions, kv_mode: str, fused: bool = False,
+                  mesh=None):
     B = x.shape[0]
     if kind == "mamba":
         h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
@@ -496,25 +497,45 @@ def _decode_block(kind: str, p: Params, x: jax.Array, cfg, cache, pos,
         new_cache = {"k": k, "v": v}
     elif kv_mode == "paged":
         adaptive = cfg.kv_policy in paged_kv.TRUE_ADAPTIVE_KV
-        if adaptive:
-            core = paged_kv.adaptive_core(cfg.kv_policy, B,
-                                          cfg.bounded_kv_pages)
-            apool = paged_kv.adaptive_insert_token(
-                cache, nk[:, 0], nv[:, 0], pos, cfg.page_size, core)
-            pool = apool.pool
+        if fused:
+            # one Pallas launch: victim selection + KV gather + attention +
+            # policy-plane update (kernels/policy_attn.py, DESIGN.md §10);
+            # decisions bit-identical to the unfused chain below
+            q = L.decode_q(p, h, cfg, position=pos)
+            if adaptive:
+                core = paged_kv.adaptive_core(cfg.kv_policy, B,
+                                              cfg.bounded_kv_pages)
+                out, _, new_cache = paged_kv.fused_adaptive_decode_step(
+                    cache, q, nk[:, 0], nv[:, 0], pos, cfg.page_size, core,
+                    mesh=mesh)
+            else:
+                out, _, new_cache = paged_kv.fused_decode_step(
+                    cache, q, nk[:, 0], nv[:, 0], pos, cfg.page_size,
+                    cfg.kv_policy, mesh=mesh)
+            attn_out = L.decode_project_out(p, out.astype(x.dtype), cfg)
         else:
-            pool = paged_kv.insert_token(cache, nk[:, 0], nv[:, 0], pos,
-                                         cfg.page_size, policy=cfg.kv_policy)
-        Ppool, page = pool.f.shape[1], cfg.page_size
-        kflat = pool.k.reshape(B, Ppool * page, -1)
-        vflat = pool.v.reshape(B, Ppool * page, -1)
-        kv_pos = paged_kv.kv_positions(pool, pos, page)
-        attn_out, mass = L.decode_attend(p, h, cfg, position=pos, k_cache=kflat,
-                                         v_cache=vflat, kv_positions=kv_pos)
-        if adaptive:
-            new_cache = paged_kv.adaptive_score_update(apool, mass, page, core)
-        else:
-            new_cache = paged_kv.score_update(pool, mass, page)
+            if adaptive:
+                core = paged_kv.adaptive_core(cfg.kv_policy, B,
+                                              cfg.bounded_kv_pages)
+                apool = paged_kv.adaptive_insert_token(
+                    cache, nk[:, 0], nv[:, 0], pos, cfg.page_size, core)
+                pool = apool.pool
+            else:
+                pool = paged_kv.insert_token(cache, nk[:, 0], nv[:, 0], pos,
+                                             cfg.page_size,
+                                             policy=cfg.kv_policy)
+            Ppool, page = pool.f.shape[1], cfg.page_size
+            kflat = pool.k.reshape(B, Ppool * page, -1)
+            vflat = pool.v.reshape(B, Ppool * page, -1)
+            kv_pos = paged_kv.kv_positions(pool, pos, page)
+            attn_out, mass = L.decode_attend(p, h, cfg, position=pos,
+                                             k_cache=kflat, v_cache=vflat,
+                                             kv_positions=kv_pos)
+            if adaptive:
+                new_cache = paged_kv.adaptive_score_update(apool, mass, page,
+                                                           core)
+            else:
+                new_cache = paged_kv.score_update(pool, mass, page)
     else:  # full
         k, v = paged_kv.full_cache_insert(cache["k"], cache["v"], nk, nv, pos)
         T = k.shape[1]
@@ -569,8 +590,14 @@ def _encdec_decode(params, cfg, token, caches):
 
 
 def decode_step(params: Params, cfg, token: jax.Array, caches,
-                *, kv_mode: str = "full"):
-    """One serving step: token (B, 1) int32 -> (logits (B, 1, Vpad), caches)."""
+                *, kv_mode: str = "full", fused: bool = False, mesh=None):
+    """One serving step: token (B, 1) int32 -> (logits (B, 1, Vpad), caches).
+
+    ``fused=True`` routes paged-KV attention blocks through the fused
+    policy-attention Pallas kernels (victim selection + gather + score update
+    in one launch; interpret-mode fallback on CPU) — decisions bit-identical
+    to the unfused path.  ``mesh`` launches the fused kernel shard-locally
+    under ``shard_map`` (PR 7 rows-mesh contract)."""
     if cfg.family == "encdec":
         return _encdec_decode(params, cfg, token, caches)
     pos = caches["pos"]
@@ -590,7 +617,8 @@ def decode_step(params: Params, cfg, token: jax.Array, caches,
         for pname, kind in unit:
             prm = params["shared_attn"] if kind == "shared_attn" else pslices[pname]
             h, new_caches[pname] = _decode_block(
-                kind, prm, h, cfg, cslices[pname], pos, win_positions, kv_mode)
+                kind, prm, h, cfg, cslices[pname], pos, win_positions,
+                kv_mode, fused, mesh)
         return h, new_caches
 
     x, new_stacked = jax.lax.scan(body, x, (stacked_params, stacked_caches))
@@ -598,7 +626,7 @@ def decode_step(params: Params, cfg, token: jax.Array, caches,
     for pname, kind in tail:
         x, new_blocks[pname] = _decode_block(
             kind, params[pname], x, cfg, caches["blocks"][pname], pos,
-            win_positions, kv_mode)
+            win_positions, kv_mode, fused, mesh)
     logits = logits_from_hidden(params, cfg, x)
     return logits, {"pos": pos + 1, "blocks": new_blocks}
 

@@ -26,8 +26,8 @@ configs; the same jitted functions are what the dry-run lowers for the
     ``telemetry()`` dict under a namespaced key (``prefix/...``,
     ``kv/...``, ``expert/...``) — see ``ServeEngine.telemetry``;
   * fully-jitted decode loop: by default the whole decode loop (decode
-    step + sampling + PRNG chain) is ONE jitted program per (steps,
-    temperature) with the KV caches and PRNG key donated in
+    step + sampling + PRNG chain) is ONE jitted program per ``steps``
+    bucket (temperature is traced) with the KV caches and PRNG key donated in
     (``donate_argnums`` — XLA reuses the buffers in place), and
     multi-tenant admission runs as one jitted batch scan on the device
     pressure plane; ``jit_loop=False`` restores the host-orchestrated
@@ -51,7 +51,7 @@ from repro.cache import paged_kv
 from repro.cache.paged_kv import AdaptivePagedPool
 from repro.cache.prefix_cache import PrefixCache
 from repro.models import model as M
-from repro.serve.sampling import sample
+from repro.serve.sampling import sample, sample_traced
 from repro.serve.tenancy import (
     DEFER,
     SHED,
@@ -98,8 +98,8 @@ class ServeEngine:
 
     Two decode-loop modes (DESIGN.md §9):
 
-    * ``jit_loop=True`` (default) — ONE jitted program per (steps,
-      temperature) runs the whole decode loop on device (``lax.scan`` of
+    * ``jit_loop=True`` (default) — ONE jitted program per ``steps``
+      bucket (temperature traced) runs the whole decode loop on device (``lax.scan`` of
       decode+sample), with the KV caches and the PRNG key DONATED into it
       (``jax.jit(..., donate_argnums=...)``): XLA reuses the cache buffers
       in place, and host code only marshals inputs/outputs.  Admission for
@@ -123,11 +123,16 @@ class ServeEngine:
                  tenants: Optional[Dict[str, int]] = None,
                  admission: Optional[AdmissionController] = None,
                  auto_rebalance: bool = False, jit_loop: bool = True,
-                 mesh=None):
+                 mesh=None, fused: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.kv_mode = kv_mode
+        #: route paged-KV decode blocks through the fused policy-attention
+        #: Pallas kernels (kernels/policy_attn.py) — victim selection, KV
+        #: gather and the score update in one launch, decisions bit-identical
+        #: to the unfused path; interpret-mode fallback on CPU
+        self.fused = bool(fused)
         self.tenants = dict(tenants) if tenants else None
         self.auto_rebalance = bool(auto_rebalance)
         #: optional core.sharding rows mesh: KV caches (and the tenant rows)
@@ -155,10 +160,12 @@ class ServeEngine:
             lambda p, b: M.prefill(p, cfg, b, max_len=max_len, kv_mode=kv_mode)
         )
         self._decode = jax.jit(
-            lambda p, t, c: M.decode_step(p, cfg, t, c, kv_mode=kv_mode)
+            lambda p, t, c: M.decode_step(p, cfg, t, c, kv_mode=kv_mode,
+                                          fused=self.fused, mesh=mesh)
         )
-        #: jitted whole-decode-loop programs, one per (steps, temperature)
-        self._loops: Dict[tuple, object] = {}
+        #: jitted whole-decode-loop programs, one per steps bucket
+        #: (temperature is a traced operand — no retrace per temperature)
+        self._loops: Dict[int, object] = {}
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
                       "shed": 0, "deferred": 0, "kv_ghost_hits": 0,
                       "rebalances": 0}
@@ -196,35 +203,37 @@ class ServeEngine:
         return logits, caches
 
     # -- the jitted decode loop (DESIGN.md §9) ------------------------------
-    def _get_loop(self, steps: int, temperature: float):
-        """The fused decode-loop program for this (steps, temperature):
-        greedy first token from the prefill logits, then ``steps - 1``
-        scanned decode+sample iterations.  ``caches`` and ``key`` are
-        DONATED — the caller must treat the passed-in values as consumed
-        and use only the returned ones (stored prefix payloads are
-        snapshotted around this, see ``_run_bucket``).  ``temperature`` is
-        baked in at trace time because ``sample`` branches on it in
-        Python."""
-        k = (int(steps), float(temperature))
+    def _get_loop(self, steps: int):
+        """The jitted decode-loop program for this ``steps`` bucket: greedy
+        first token from the prefill logits, then ``steps - 1`` scanned
+        decode+sample iterations.  ``caches`` and ``key`` are DONATED — the
+        caller must treat the passed-in values as consumed and use only the
+        returned ones (stored prefix payloads are snapshotted around this,
+        see ``_run_bucket``).  ``temperature`` is a TRACED loop operand
+        (``sample_traced``), so only ``steps`` buckets compile — previously
+        every (steps, temperature) pair retraced the whole loop."""
+        k = int(steps)
         loop = self._loops.get(k)
         if loop is None:
-            loop = self._build_loop(int(steps), float(temperature))
+            loop = self._build_loop(k)
             self._loops[k] = loop
         return loop
 
-    def _build_loop(self, steps: int, temperature: float):
+    def _build_loop(self, steps: int):
         cfg, kv_mode = self.cfg, self.kv_mode
+        fused, mesh = self.fused, self.mesh
 
         @functools.partial(jax.jit, donate_argnums=(2, 3))
-        def loop(params, logits, caches, key):
+        def loop(params, logits, caches, key, temperature):
             toks = sample(logits[:, -1:], key, temperature=0.0,
                           vocab=cfg.vocab)
 
             def body(carry, _):
                 t, c, k = carry
                 k, sub = jax.random.split(k)
-                lg, c = M.decode_step(params, cfg, t, c, kv_mode=kv_mode)
-                t = sample(lg, sub, temperature=temperature, vocab=cfg.vocab)
+                lg, c = M.decode_step(params, cfg, t, c, kv_mode=kv_mode,
+                                      fused=fused, mesh=mesh)
+                t = sample_traced(lg, sub, temperature, vocab=cfg.vocab)
                 return (t, c, k), t
 
             (_, caches, key), ys = jax.lax.scan(
@@ -482,9 +491,10 @@ class ServeEngine:
 
         caches = self._shard_caches(caches, len(reqs))
         if self.jit_loop:
-            loop = self._get_loop(max_new, reqs[0].temperature)
+            loop = self._get_loop(max_new)
             gen_dev, caches, self.key = loop(
-                self.params, logits, caches, self.key)
+                self.params, logits, caches, self.key,
+                jnp.float32(reqs[0].temperature))
             self.stats["decode_steps"] += max_new - 1
             gen = np.asarray(gen_dev)
         else:

@@ -19,3 +19,25 @@ def sample(logits: jax.Array, key: jax.Array, *, temperature: float = 0.0,
         thresh = jax.lax.top_k(x, top_k)[0][..., -1:]
         x = jnp.where(x < thresh, -jnp.inf, x)
     return jax.random.categorical(key, x, axis=-1).astype(jnp.int32)[:, None]
+
+
+def sample_traced(logits: jax.Array, key: jax.Array,
+                  temperature: jax.Array, *, top_k: int = 0,
+                  vocab: int | None = None) -> jax.Array:
+    """``sample`` with ``temperature`` as a TRACED operand: one compiled
+    program covers every temperature (the jitted decode loop previously
+    retraced per (steps, temperature) pair — ROADMAP "cross-batch
+    persistent decode").  Token-identical to ``sample``: ``t <= 0`` selects
+    the same argmax greedy branch, ``t > 0`` divides by the same value (the
+    1e-6 clamp only guards the dead division under the greedy select)."""
+    x = logits[:, 0].astype(jnp.float32)
+    if vocab is not None:  # mask padded vocab rows
+        x = jnp.where(jnp.arange(x.shape[-1]) < vocab, x, -jnp.inf)
+    t = jnp.asarray(temperature, jnp.float32)
+    greedy = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    xs = x / jnp.maximum(t, jnp.float32(1e-6))
+    if top_k:
+        thresh = jax.lax.top_k(xs, top_k)[0][..., -1:]
+        xs = jnp.where(xs < thresh, -jnp.inf, xs)
+    sampled = jax.random.categorical(key, xs, axis=-1).astype(jnp.int32)
+    return jnp.where(t <= 0.0, greedy, sampled)[:, None]

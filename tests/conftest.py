@@ -1,0 +1,21 @@
+"""Shared pytest fixtures: per-module jax compilation-cache hygiene.
+
+One pytest process compiles on the order of a thousand XLA:CPU programs
+across the full suite.  jax 0.4.37's CPU backend can segfault inside
+``backend_compile`` (a native LLVM-JIT crash, not OOM — RSS stays ~6 GB
+on a 128 GB box) once that much compiled-program state accumulates in a
+single process; the same compile always succeeds when its module runs
+alone.  Dropping jax's caches between modules bounds the live JIT state
+to one module's worth — which every module satisfies in isolation — at
+the cost of recompiling the few functions shared across modules.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Free compiled executables + tracing caches after each test module."""
+    yield
+    jax.clear_caches()

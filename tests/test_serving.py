@@ -30,6 +30,27 @@ def test_generate_deterministic_greedy(engine):
     assert all(0 <= t < engine.cfg.vocab for t in r1[0].tokens)
 
 
+def test_decode_loop_temperature_does_not_retrace(engine):
+    """Regression (ROADMAP "cross-batch persistent decode"): temperature is
+    a TRACED loop operand, so requests at new temperatures reuse the
+    compiled program — only ``steps`` buckets compile.  Counted via the
+    jitted loop's compilation-cache size."""
+    prompt = list(range(1, 17))
+    n_loops_before = len(engine._loops)
+    for i, temp in enumerate((0.0, 0.7, 1.3)):
+        engine.generate([Request(100 + i, list(prompt), max_new_tokens=5,
+                                 temperature=temp)])
+    assert len(engine._loops) == n_loops_before + 1  # ONE steps=5 bucket
+    loop = engine._loops[5]
+    assert loop._cache_size() == 1  # ONE compilation across 3 temperatures
+    # and temperature zero through the traced operand stays greedy-identical
+    greedy = engine.generate(
+        [Request(200, list(prompt), max_new_tokens=5, temperature=0.0)])
+    again = engine.generate(
+        [Request(201, list(prompt), max_new_tokens=5, temperature=0.0)])
+    assert greedy[200].tokens == again[201].tokens
+
+
 def test_prefix_cache_hit_skips_prefill(engine):
     prompt = list(range(30, 46))
     before = engine.stats["prefills"]

@@ -23,7 +23,7 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 TARGETS = ("src/repro/serve", "src/repro/core", "src/repro/cache",
-           "benchmarks")
+           "src/repro/kernels", "benchmarks")
 
 
 def _missing(tree: ast.Module, path: pathlib.Path):

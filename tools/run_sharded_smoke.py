@@ -4,9 +4,10 @@ Forces ``N`` XLA host devices (default 8) via
 ``--xla_force_host_platform_device_count`` and then runs, in child
 processes so the flag is guaranteed to precede the first jax import:
 
-1. ``tests/test_sharding.py`` — the bit-identity property suite at the
-   forced device count (the multi-device cases that skip in plain tier-1
-   actually run here);
+1. ``tests/test_sharding.py`` + the fast fused-kernel suite
+   ``tests/test_policy_attn.py`` — the bit-identity property suites at
+   the forced device count (the mesh parity cases that skip in plain
+   tier-1 actually run here, including the fused ``shard_map`` path);
 2. ``benchmarks/run.py --sections sharded_sweep --smoke`` — the sweep
    engine's parity gate + scaling record.
 
@@ -46,7 +47,9 @@ def main(argv=None) -> int:
     steps = [
         ("sharded parity suite",
          [sys.executable, "-m", "pytest", "-x", "-q",
-          os.path.join(REPO, "tests", "test_sharding.py")]),
+          os.path.join(REPO, "tests", "test_sharding.py"),
+          "-m", "not slow",
+          os.path.join(REPO, "tests", "test_policy_attn.py")]),
         ("sharded sweep bench (parity gate + scaling record)",
          [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
           "--sections", "sharded_sweep", "--smoke"]),
