@@ -1,0 +1,177 @@
+"""Observability overhead gate + sample exporter artifacts (DESIGN.md §11).
+
+Two measurements:
+
+* **metrics overhead** — ``ServeEngine.generate`` end to end with the
+  metrics registry + loop planes ON vs OFF (``metrics=False``), identical
+  single-tenant request streams, fully-jitted loop, best-of-3 timed
+  passes after a compile warmup.  The zero-sync claim is enforced as a
+  HARD gate: the instrumented engine must keep >= 95% of the
+  uninstrumented throughput (the planes are a few integer adds inside an
+  already-compiled scan; the registry never syncs until ``telemetry()``).
+* **snapshot / drain / regret cost** — microseconds for one
+  ``telemetry()`` pull, one decision-trace drain, and one ``opt_regret``
+  replay on a multi-tenant engine with a live ring — the request-boundary
+  costs a deployment actually pays.
+
+Also emits the sample exporter artifacts the CI bench-smoke job uploads
+(``obs_snapshot.prom`` / ``obs_snapshot.jsonl``) and merges the
+``obs_overhead`` record into ``--sweep-json``.
+"""
+
+from __future__ import annotations
+
+try:  # runs both as a script and as a module
+    from benchmarks.xla_env import enable_fast_cpu_scan
+except ImportError:
+    from xla_env import enable_fast_cpu_scan
+enable_fast_cpu_scan()
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import load_smoke_config
+from repro.models import model as M
+from repro.obs.export import append_jsonl, prometheus_text
+from repro.serve.engine import Request, ServeEngine
+
+#: hard gate: instrumented throughput must stay within 5% of bare
+MAX_OVERHEAD = 0.05
+
+
+def _requests(n: int, cfg, new_tokens: int):
+    """Distinct same-length prompts: one bucket shape, one compile, no
+    prefix reuse — the decode loop (where the planes live) dominates."""
+    rng = np.random.RandomState(0)
+    return [
+        Request(i, rng.randint(1, cfg.vocab, size=16).tolist(),
+                max_new_tokens=new_tokens, temperature=0.0)
+        for i in range(n)
+    ]
+
+
+def _best_interleaved(engines, reqs, rounds: int = 8):
+    """Warm both engines (compiles the bucket), then alternate timed
+    passes round-robin and keep each engine's best wall time.  The
+    interleaving + best-of damps host scheduling noise symmetrically, so
+    the gate binds on real overhead, not on which engine ran while the
+    machine was colder."""
+    for e in engines:
+        e.generate([dataclasses.replace(r) for r in reqs])
+    best = [float("inf")] * len(engines)
+    for _ in range(rounds):
+        for i, e in enumerate(engines):
+            t0 = time.perf_counter()
+            e.generate([dataclasses.replace(r) for r in reqs])
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def _trace_engine(cfg, params):
+    eng = ServeEngine(cfg, params, max_len=128,
+                      tenants={"hot": 4, "scan": 2}, decision_trace=256,
+                      jit_loop=True, seed=0)
+    loop = list(range(1, 17))
+    rng = np.random.RandomState(1)
+    for i in range(4):
+        eng.generate([Request(i, list(loop), max_new_tokens=4,
+                              tenant_id="hot")])
+        eng.generate([Request(10 + i,
+                              rng.randint(1, cfg.vocab, size=16).tolist(),
+                              max_new_tokens=4, tenant_id="scan")])
+    return eng
+
+
+def run(out_lines=None, smoke: bool = False, sweep_json=None):
+    """Gate the metrics-on vs metrics-off serve throughput at
+    ``MAX_OVERHEAD``, time the request-boundary pulls, write the sample
+    ``obs_snapshot.prom`` / ``obs_snapshot.jsonl`` artifacts, and merge
+    the ``obs_overhead`` record into ``sweep_json``."""
+    n_reqs = 6 if smoke else 16
+    new_tokens = 8 if smoke else 16
+
+    cfg = load_smoke_config("gemma3_27b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _requests(n_reqs, cfg, new_tokens)
+
+    dt_off, dt_on = _best_interleaved(
+        (ServeEngine(cfg, params, max_len=128, metrics=False, seed=0),
+         ServeEngine(cfg, params, max_len=128, metrics=True, seed=0)),
+        reqs)
+    rps_off, rps_on = n_reqs / dt_off, n_reqs / dt_on
+    overhead = 1.0 - rps_on / rps_off
+
+    # request-boundary pull costs on a live multi-tenant + ring engine
+    eng = _trace_engine(cfg, params)
+    eng.telemetry()  # warm: the first pull compiles the provider reductions
+    t0 = time.perf_counter()
+    tel = eng.telemetry()
+    us_snapshot = 1e6 * (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    rec = eng.drain_decision_trace()
+    us_drain = 1e6 * (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    regret = eng.opt_regret()
+    us_regret = 1e6 * (time.perf_counter() - t0)
+
+    print(f"== obs overhead ({n_reqs} requests x {new_tokens} new tokens, "
+          f"fully-jitted loop) ==")
+    print(f"metrics off: {rps_off:6.2f} req/s ({dt_off:.2f}s)")
+    print(f"metrics on:  {rps_on:6.2f} req/s ({dt_on:.2f}s)  "
+          f"[overhead {100 * overhead:+.1f}%]")
+    print(f"snapshot {us_snapshot:.0f} us ({len(tel)} metrics), "
+          f"trace drain {us_drain:.0f} us ({len(rec)} records), "
+          f"opt regret {us_regret:.0f} us "
+          f"(aggregate {regret['aggregate']['regret']:.2f})")
+
+    # sample exporter artifacts (uploaded by the CI bench-smoke job)
+    tel = eng.telemetry()  # re-pull: includes the opt_regret gauges
+    with open("obs_snapshot.prom", "w") as fh:
+        fh.write(prometheus_text(tel))
+    append_jsonl("obs_snapshot.jsonl", tel,
+                 extra={"arch": cfg.name, "decision_trace": 256})
+    print("(sample snapshot written to obs_snapshot.prom / obs_snapshot.jsonl)")
+
+    if out_lines is not None:
+        out_lines.append(
+            f"obs_metrics_on,{1e6 / rps_on:.0f},{rps_on:.2f}_req_per_s")
+        out_lines.append(
+            f"obs_metrics_off,{1e6 / rps_off:.0f},{rps_off:.2f}_req_per_s")
+        out_lines.append(
+            f"obs_snapshot,{us_snapshot:.0f},{len(tel)}_metrics")
+    if sweep_json is not None:
+        record = {
+            "n_requests": n_reqs,
+            "new_tokens": new_tokens,
+            "requests_per_sec": {"metrics_on": round(rps_on, 2),
+                                 "metrics_off": round(rps_off, 2)},
+            "overhead_frac": round(overhead, 4),
+            "gate_max_overhead": MAX_OVERHEAD,
+            "snapshot_us": round(us_snapshot),
+            "trace_drain_us": round(us_drain),
+            "opt_regret_us": round(us_regret),
+        }
+        base = {}
+        if os.path.exists(sweep_json):
+            with open(sweep_json) as fh:
+                base = json.load(fh)
+        base["obs_overhead"] = record
+        with open(sweep_json, "w") as fh:
+            json.dump(base, fh, indent=2)
+            fh.write("\n")
+        print(f"(obs_overhead record merged into {sweep_json})")
+
+    if overhead > MAX_OVERHEAD:  # the hard gate — fails the bench job
+        raise AssertionError(
+            f"observability overhead {100 * overhead:.1f}% exceeds the "
+            f"{100 * MAX_OVERHEAD:.0f}% gate "
+            f"({rps_on:.2f} vs {rps_off:.2f} req/s)")
+
+
+if __name__ == "__main__":
+    run()

@@ -36,8 +36,8 @@ import traceback
 #: --sweep-json artifact and the later two merge into the record
 #: policy_overhead writes.
 SMOKE_SECTIONS = ("table1", "trace_suite", "policy_overhead", "tenancy",
-                  "sharded_sweep", "serve_loop", "kernel_bench",
-                  "policy_attn")
+                  "sharded_sweep", "serve_loop", "obs_overhead",
+                  "kernel_bench", "policy_attn")
 
 
 def main(argv=None) -> None:
@@ -90,6 +90,7 @@ def main(argv=None) -> None:
         expert_cache_bench,
         grad_compress_bench,
         kernel_bench,
+        obs_bench,
         policy_attn_bench,
         policy_overhead,
         roofline_report,
@@ -132,6 +133,10 @@ def main(argv=None) -> None:
         "serve_loop": (
             "Fully-jitted serve loop vs host-orchestrated (DESIGN.md §9)",
             serve_loop_bench.run),
+        "obs_overhead": (
+            "Observability overhead gate + exporter artifacts "
+            "(DESIGN.md §11)",
+            obs_bench.run),
         "expert_cache": ("Expert cache (MoE serving)", expert_cache_bench.run),
         "grad_compress": ("Gradient compression", grad_compress_bench.run),
         "roofline": ("Roofline report (from dry-run artifacts)",

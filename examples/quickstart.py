@@ -90,8 +90,8 @@ for i in range(4):  # each round one batch, two tenants, one admission dispatch
     statuses.update({r.rid: r.status for r in results.values()})
 print(f"\nstatuses: {statuses}")
 assert set(statuses.values()) == {"ok"}
-t = eng.telemetry()  # namespaced: engine, prefix/<tenant>, kv/..., expert/...
-print(f"prefix/alice hit ratio: {t['prefix/alice']['hit_ratio']:.2f} "
-      f"(re-used prompt), prefix/bob: {t['prefix/bob']['hit_ratio']:.2f}")
-assert t["prefix/alice"]["hit_ratio"] > t["prefix/bob"]["hit_ratio"]
+t = eng.telemetry()  # ONE flat snapshot: serve/..., tenant/<t>/..., kv/...
+print(f"tenant/alice hit ratio: {t['tenant/alice/hit_ratio']:.2f} "
+      f"(re-used prompt), tenant/bob: {t['tenant/bob/hit_ratio']:.2f}")
+assert t["tenant/alice/hit_ratio"] > t["tenant/bob/hit_ratio"]
 print("continuous-batching serve loop: ok")

@@ -33,6 +33,7 @@ from typing import Dict, Iterable
 import numpy as np
 
 from repro.core.simulator import SimResult, simulate
+from repro.obs.metrics import safe_ratio
 
 
 def router_trace_from_logits(expert_idx: np.ndarray) -> np.ndarray:
@@ -162,9 +163,10 @@ class ExpertCacheRuntime:
 
     @property
     def hit_ratio(self) -> float:
-        """Fraction of expert accesses served without an HBM transfer."""
-        hits = self.accesses - self.transfers
-        return hits / self.accesses if self.accesses else 0.0
+        """Fraction of expert accesses served without an HBM transfer
+        (0.0 before any access — the shared ``obs.metrics.safe_ratio``
+        guard)."""
+        return safe_ratio(self.accesses - self.transfers, self.accesses)
 
     def telemetry(self) -> dict:
         """Uniform per-cache stats (the serving engine's one code path)."""

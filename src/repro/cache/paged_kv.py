@@ -296,6 +296,21 @@ def seed_adaptive_state(
     )
 
 
+def pool_telemetry(state: AdaptiveState) -> Dict[str, jax.Array]:
+    """Registry provider planes for a persisted true-adaptive KV policy
+    state: the self-tuning ``p`` (mean/max over rows) and mean resident
+    pages, as UN-pulled 0-d device arrays — the obs registry batches them
+    into its single snapshot ``device_get`` (DESIGN.md §11).  Accepts
+    tail-layer ``(B, 1, L)`` and stacked ``(n_rep, B, 1, L)`` planes
+    alike."""
+    resident = (state.tag == _TAG_T1) | (state.tag == _TAG_T2)
+    return {
+        "p_mean": jnp.mean(state.p),
+        "p_max": jnp.max(state.p),
+        "resident_mean": jnp.mean(jnp.sum(resident, axis=-1).astype(jnp.float32)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # ghost-hit feed: cross-request re-references for the true-adaptive pool
 # ---------------------------------------------------------------------------

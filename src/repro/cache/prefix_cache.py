@@ -17,6 +17,7 @@ from typing import Any, Dict, Optional
 import jax
 
 from repro.core.policy_core import make_cache_policy
+from repro.obs.metrics import safe_ratio
 
 
 def prompt_key(tokens) -> int:
@@ -70,9 +71,9 @@ class PrefixCache:
 
     @property
     def hit_ratio(self) -> float:
-        """Lookup hit ratio since construction (0.0 before any lookup)."""
-        n = self.hits + self.misses
-        return self.hits / n if n else 0.0
+        """Lookup hit ratio since construction (0.0 before any lookup —
+        the shared ``obs.metrics.safe_ratio`` guard)."""
+        return safe_ratio(self.hits, self.hits + self.misses)
 
     def telemetry(self) -> dict:
         """Uniform per-cache stats (the serving engine's one code path)."""

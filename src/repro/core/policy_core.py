@@ -629,14 +629,24 @@ class _Accounting:
         *,
         active: jax.Array | None = None,
         pressure_alpha: float = 0.1,
-    ) -> Tuple["PolicyState", RowCounters, jax.Array]:
+        ring=None,
+    ):
         """``on_access`` + per-row hit/miss/eviction accounting and the
         admission pressure EWMA.
 
         Active rows fold this access's eviction count into ``pressure`` as
         ``(1 - alpha) * p + alpha * evicted``; inactive rows keep their
         pressure (and all other counters) untouched.  Pure and jit-safe:
-        returns new state/counters, mutates nothing."""
+        returns new state/counters, mutates nothing.
+
+        ``ring`` (an ``obs.decision_trace.DecisionRing``) opts into decision
+        tracing: one KIND_ACCESS event per active row — hit flag, advisory
+        victim lane, and the core's policy internals (AWRP victim weight for
+        flat cores, ARC/CAR ``p`` before/after for adaptive cores) — is
+        scattered into the ring and the call returns a 4-tuple
+        ``(state, counters, hit, ring)``.  Tracing reads the pre/post states
+        but feeds nothing back into them, so decisions are bit-identical
+        with tracing on or off (tests/test_obs.py pins it)."""
         occ_b = self.occupancy(state)
         new_state, hit = self.on_access(state, ids, active=active)
         occ_a = self.occupancy(new_state)
@@ -655,7 +665,21 @@ class _Accounting:
             evictions=counters.evictions + evicted,
             pressure=jnp.where(act, p_new, counters.pressure),
         )
-        return new_state, new_counters, hit
+        if ring is None:
+            return new_state, new_counters, hit
+        from repro.obs import decision_trace as dt
+
+        cols = self._trace_cols(state, new_state)
+        events = dt.pack_events(
+            self.rows,
+            kind=dt.KIND_ACCESS,
+            row=jnp.arange(self.rows, dtype=jnp.int32),
+            key=jnp.asarray(ids, dtype=jnp.int32),
+            hit=hit.astype(jnp.int32),
+            set_id=0,
+            **cols,
+        )
+        return new_state, new_counters, hit, dt.ring_push(ring, events, act)
 
     def row_telemetry(
         self, state: "PolicyState", counters: RowCounters
@@ -894,6 +918,23 @@ class FlatCore(_Accounting):
         )
         return v.reshape(B, S)
 
+    def _trace_cols(
+        self, state: FlatState, new_state: FlatState
+    ) -> Dict[str, jax.Array]:
+        """Decision-trace fields for flat cores (single-set layout): the
+        pre-access advisory victim lane and its AWRP weight at the decision
+        clock N+1 (meaningful for awrp rows; informational for the rest)."""
+        if self.num_sets != 1:
+            raise NotImplementedError(
+                "decision tracing covers the single-set serving layout"
+            )
+        victim = self.victim(state)
+        bidx = jnp.arange(self.rows)
+        w = awrp_weights(
+            state.f[bidx, victim], state.r[bidx, victim], state.clock + 1
+        )
+        return {"victim": victim, "weight": w}
+
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveCore(_Accounting):
@@ -1028,6 +1069,20 @@ class AdaptiveCore(_Accounting):
         iota = jnp.arange(L, dtype=jnp.int32)
         lane = jnp.min(jnp.where(ev, iota, L), axis=-1)
         return jnp.where(lane < L, lane, -1).astype(jnp.int32)
+
+    def _trace_cols(
+        self, state: AdaptiveState, new_state: AdaptiveState
+    ) -> Dict[str, jax.Array]:
+        """Decision-trace fields for adaptive cores: the pre-access advisory
+        victim lane (-1 while the cache is filling) and the adaptation
+        target ``p`` before/after the access — the live view of ARC/CAR's
+        learning signal."""
+        victim = self.victim(state)
+        return {
+            "victim": victim[:, 0] if victim.ndim == 2 else victim,
+            "p_before": state.p[:, 0],
+            "p_after": new_state.p[:, 0],
+        }
 
     def resident_mask(self, state: AdaptiveState) -> jax.Array:
         """(rows, num_sets, L) bool — lanes whose block is cache-resident

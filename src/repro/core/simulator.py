@@ -28,6 +28,8 @@ from typing import Dict, Iterable, Sequence
 
 import numpy as np
 
+from repro.obs.metrics import safe_ratio
+
 from .policies import OPT, ReplacementPolicy, make_policy
 
 __all__ = ["SimResult", "simulate", "sweep", "hit_ratio_table"]
@@ -45,8 +47,9 @@ class SimResult:
 
     @property
     def hit_ratio(self) -> float:
-        """hits / accesses (0.0 on an empty trace)."""
-        return self.hits / self.accesses if self.accesses else 0.0
+        """hits / accesses (0.0 on an empty trace — the shared
+        ``obs.metrics.safe_ratio`` guard)."""
+        return safe_ratio(self.hits, self.accesses)
 
     @property
     def miss_ratio(self) -> float:

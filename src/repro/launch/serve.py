@@ -49,6 +49,14 @@ def main():
                     help="use the host-orchestrated per-step decode loop "
                     "instead of the default fully-jitted donated-buffer "
                     "loop (DESIGN.md §9) — the serve_loop bench baseline")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="export the final telemetry snapshot: writes "
+                    "PATH.prom (Prometheus text exposition) and appends one "
+                    "JSON line to PATH.jsonl (obs.export)")
+    ap.add_argument("--decision-trace", type=int, default=0, metavar="N",
+                    help="multi-tenant only: record the last N policy "
+                    "decisions in the on-device trace ring and report "
+                    "OPT-regret gauges in the final snapshot")
     args = ap.parse_args()
 
     tenants = None
@@ -61,10 +69,13 @@ def main():
     cfg = load_smoke_config(args.arch)
     cfg = dataclasses.replace(cfg, kv_policy=args.kv_policy)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if args.decision_trace and tenants is None:
+        ap.error("--decision-trace needs --tenants")
     engine = ServeEngine(cfg, params, max_len=args.max_len,
                          kv_mode=args.kv_mode, tenants=tenants,
                          auto_rebalance=args.auto_rebalance,
-                         jit_loop=not args.host_loop)
+                         jit_loop=not args.host_loop,
+                         decision_trace=args.decision_trace)
 
     rng = np.random.RandomState(0)
     names = list(tenants) if tenants else ["default"]
@@ -94,20 +105,35 @@ def main():
           f"loop={loop}")
     print(f"{len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s host-side)")
-    tel = engine.telemetry()
+    if args.decision_trace:
+        regret = engine.opt_regret()  # also sets the registry gauges
+        agg = regret["aggregate"]
+        print(f"opt regret ({agg['accesses']} traced accesses): "
+              f"observed={agg['observed']:.2f} opt={agg['opt']:.2f} "
+              f"regret={agg['regret']:.2f}")
+    tel = engine.telemetry()  # ONE flat snapshot, one device pull
     if tenants is None:
-        pc = tel["prefix/cache"]
-        print(f"prefix cache: hits={pc['hits']} misses={pc['misses']} "
-              f"(ratio {pc['hit_ratio']:.2f})")
+        print(f"prefix cache: hits={tel['prefix/hits']} "
+              f"misses={tel['prefix/misses']} "
+              f"(ratio {tel['prefix/hit_ratio']:.2f})")
     else:
         for name in names:
-            d = tel[f"prefix/{name}"]
-            print(f"tenant {name}: quota={d['quota']} "
-                  f"hit_ratio={d['hit_ratio']:.2f} "
-                  f"evictions={d['evictions']} pressure={d['pressure']:.2f}")
-        print(f"admission: shed={engine.stats['shed']} "
-              f"deferred={engine.stats['deferred']} "
-              f"rebalances={engine.stats['rebalances']}")
+            print(f"tenant {name}: quota={tel[f'tenant/{name}/quota']} "
+                  f"hit_ratio={tel[f'tenant/{name}/hit_ratio']:.2f} "
+                  f"evictions={tel[f'tenant/{name}/evictions']} "
+                  f"pressure={tel[f'tenant/{name}/pressure']:.2f}")
+        print(f"admission: shed={tel['serve/shed']} "
+              f"deferred={tel['serve/deferred']} "
+              f"rebalances={tel['serve/rebalances']}")
+    if args.metrics_out:
+        from repro.obs.export import append_jsonl, prometheus_text
+
+        with open(args.metrics_out + ".prom", "w") as fh:
+            fh.write(prometheus_text(tel))
+        append_jsonl(args.metrics_out + ".jsonl", tel,
+                     extra={"arch": cfg.name, "kv_mode": args.kv_mode})
+        print(f"metrics: wrote {args.metrics_out}.prom, appended "
+              f"{args.metrics_out}.jsonl")
     for rid in sorted(results)[:4]:
         r = results[rid]
         print(f"  req {rid}: cached={r.prefill_cached} status={r.status} "

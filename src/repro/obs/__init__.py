@@ -1,0 +1,32 @@
+"""On-device observability layer (DESIGN.md §11).
+
+Three pillars over the serving stack:
+
+* ``obs.metrics`` — the unified metrics registry: device-side counter /
+  gauge / histogram planes accumulated INSIDE the jitted loops (carried
+  through the decode scan and ``access_stream`` exactly like
+  ``RowCounters`` — zero per-step host syncs) and pulled once per
+  ``Registry.snapshot()`` as ONE batched ``jax.device_get``.
+* ``obs.decision_trace`` — a fixed-capacity on-device ring buffer of
+  per-access policy events (hit/miss, victim lane, AWRP victim weight,
+  ARC/CAR ``p`` before/after, admission codes) written by masked scatter
+  inside ``on_access_counted`` / ``decide_batch``, drainable to host as a
+  structured numpy record array.
+* ``obs.opt_oracle`` — an offline Belady (OPT) oracle replayed over
+  drained decision traces, reporting per-policy / per-tenant hit-ratio
+  regret as registry gauges.
+
+Plus ``obs.spans`` (host-side wall-clock timing spans, themselves
+registry-mounted) and ``obs.export`` (Prometheus text exposition + JSONL
+event log, wired into ``launch/serve.py --metrics-out``).
+
+Only ``metrics`` is imported at package level: ``repro.core`` /
+``repro.cache`` modules import ``safe_ratio`` from here, and keeping the
+package ``__init__`` free of the other submodules (``opt_oracle`` reaches
+back into ``repro.core.simulator``) keeps the import graph acyclic.
+Import ``repro.obs.decision_trace`` etc. explicitly.
+"""
+
+from repro.obs.metrics import Derived, Registry, safe_ratio, safe_ratio_plane
+
+__all__ = ["Derived", "Registry", "safe_ratio", "safe_ratio_plane"]

@@ -1,0 +1,162 @@
+"""On-device decision-trace ring buffer (DESIGN.md §11).
+
+A fixed-capacity ring of per-decision policy events, written by masked
+scatter INSIDE the jitted step functions (``on_access_counted`` pushes
+one access event per active row; ``decide_batch`` pushes one admission
+event per request) and drained to host as a structured numpy record
+array.  The ring is a tiny int32 pytree threaded through scan carries
+exactly like ``RowCounters`` — recording costs a few extra device ops
+and ZERO host syncs, and by construction cannot change any policy
+decision (the step's state math never reads the ring; the twin-run
+property test pins bit-identity with the ring disabled).
+
+Scatter contract (the jit-safe masked ring write): the buffer carries one
+extra scratch lane at index ``capacity``.  A push of R events with an
+R-bool mask computes per-event offsets ``count + cumsum(mask) - 1`` for
+masked-in events and routes masked-out events to the scratch lane, so
+the scatter is one fixed-shape ``.at[idx].set`` regardless of how many
+events are live.  The scratch lane is write-only garbage; ``drain``
+never reads it.  ``count`` is the total number of events ever recorded —
+``count % capacity`` is the ring head, and wraparound overwrites oldest
+first.  One push must not exceed ``capacity`` events (serving pushes one
+event per tenant row / per admission request — size the ring in hundreds
+and this never binds).
+
+Float fields (AWRP victim weight, ARC/CAR ``p``) are stored as their
+int32 bit patterns (``bitcast_convert_type``) so the whole event is one
+int32 row; ``drain`` bitcasts them back.  Key id INT_MAX never appears
+in events (it is the adaptive cores' reserved probe id), so every
+recorded key is a real access.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NF",
+    "KIND_ACCESS",
+    "KIND_ADMIT",
+    "FIELDS",
+    "DecisionRing",
+    "ring_init",
+    "ring_capacity",
+    "pack_events",
+    "ring_push",
+    "drain",
+]
+
+#: event kinds — one ring records both access and admission decisions
+KIND_ACCESS = 0
+KIND_ADMIT = 1
+
+#: event field order (int32 columns of the ring buffer).  ``weight`` /
+#: ``p_before`` / ``p_after`` hold float32 bit patterns.
+FIELDS = ("kind", "row", "key", "hit", "set", "victim", "weight",
+          "p_before", "p_after", "admit")
+NF = len(FIELDS)
+
+_F = {name: i for i, name in enumerate(FIELDS)}
+
+#: drained record dtype: float fields decoded, everything else int32
+_REC_DTYPE = np.dtype([
+    ("kind", np.int32), ("row", np.int32), ("key", np.int32),
+    ("hit", np.int32), ("set", np.int32), ("victim", np.int32),
+    ("weight", np.float32), ("p_before", np.float32),
+    ("p_after", np.float32), ("admit", np.int32),
+])
+
+
+class DecisionRing(NamedTuple):
+    """The device ring: ``buf`` is ``(capacity + 1, NF)`` int32 (lane
+    ``capacity`` is the masked-write scratch lane), ``count`` the 0-d
+    int32 total of events ever recorded.  A plain pytree — carry it
+    through scans, donate it, shard nothing (it is replicated and
+    byte-sized next to the KV planes)."""
+
+    buf: jax.Array  # (capacity + 1, NF) int32
+    count: jax.Array  # () int32 — events ever pushed
+
+
+def ring_init(capacity: int) -> DecisionRing:
+    """Fresh empty ring recording up to ``capacity`` most-recent events
+    (older events are overwritten oldest-first)."""
+    cap = int(capacity)
+    if cap <= 0:
+        raise ValueError(f"ring capacity must be positive, got {capacity}")
+    return DecisionRing(
+        buf=jnp.zeros((cap + 1, NF), dtype=jnp.int32),
+        count=jnp.int32(0),
+    )
+
+
+def ring_capacity(ring: DecisionRing) -> int:
+    """Static event capacity of ``ring`` (scratch lane excluded)."""
+    return ring.buf.shape[0] - 1
+
+
+def _col(v, n: int, *, bits: bool = False) -> jax.Array:
+    if bits:
+        f = jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n,))
+        return jax.lax.bitcast_convert_type(f, jnp.int32)
+    return jnp.broadcast_to(jnp.asarray(v, jnp.int32), (n,))
+
+
+def pack_events(n: int, *, kind, row, key, hit=-1, set_id=-1, victim=-1,
+                weight=0.0, p_before=0.0, p_after=0.0, admit=-1) -> jax.Array:
+    """Assemble ``n`` events as one ``(n, NF)`` int32 array.  Scalar or
+    ``(n,)`` operands broadcast per field; ``weight`` / ``p_before`` /
+    ``p_after`` are float32 and stored as bit patterns.  Pure and
+    jit-safe (``n`` is static)."""
+    cols = [
+        _col(kind, n), _col(row, n), _col(key, n), _col(hit, n),
+        _col(set_id, n), _col(victim, n),
+        _col(weight, n, bits=True), _col(p_before, n, bits=True),
+        _col(p_after, n, bits=True), _col(admit, n),
+    ]
+    return jnp.stack(cols, axis=-1)
+
+
+def ring_push(ring: DecisionRing, events: jax.Array,
+              mask: jax.Array) -> DecisionRing:
+    """Masked append of ``events`` ``(R, NF)`` under ``mask`` ``(R,)``
+    bool: masked-in events land at consecutive ring slots (stream order),
+    masked-out events go to the scratch lane.  One fixed-shape scatter —
+    pure, jit-safe, zero host syncs.  ``R`` must not exceed the ring
+    capacity (see module docstring)."""
+    cap = ring_capacity(ring)
+    m = jnp.asarray(mask, dtype=bool)
+    off = jnp.cumsum(m.astype(jnp.int32)) - 1
+    idx = jnp.where(m, (ring.count + off) % cap, cap)
+    return DecisionRing(
+        buf=ring.buf.at[idx].set(events.astype(jnp.int32)),
+        count=ring.count + jnp.sum(m, dtype=jnp.int32),
+    )
+
+
+def drain(ring: DecisionRing) -> np.ndarray:
+    """Pull the ring to host as a structured record array in
+    chronological order (oldest surviving event first), float fields
+    decoded from their bit patterns.  Read-only — the device ring keeps
+    accumulating; drain again later for the newer window.  This is the
+    ONE host sync of the trace path, at the caller's chosen boundary."""
+    cap = ring_capacity(ring)
+    buf, count = jax.device_get((ring.buf, ring.count))
+    n = int(count)
+    if n <= cap:
+        rows = buf[:n]
+    else:
+        head = n % cap
+        rows = np.concatenate([buf[head:cap], buf[:head]], axis=0)
+    out = np.empty(len(rows), dtype=_REC_DTYPE)
+    for name in FIELDS:
+        col = rows[:, _F[name]]
+        if _REC_DTYPE[name] == np.float32:
+            out[name] = col.view(np.float32)
+        else:
+            out[name] = col
+    return out

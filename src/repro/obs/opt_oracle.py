@@ -1,0 +1,92 @@
+"""Offline OPT (Belady) oracle over drained decision traces.
+
+Following the regret-based evaluation of adaptive policies (Consuegra et
+al., "Analyzing Adaptive Cache Replacement Strategies", PAPERS.md), the
+live policy's quality is measured against the offline optimum on the
+SAME access stream: drain the decision-trace ring
+(``obs.decision_trace``), replay each row's recorded key stream through
+``repro.core.simulator.simulate("opt", ...)`` at that row's capacity, and
+report ``regret = opt_hit_ratio - observed_hit_ratio`` per row (tenant)
+plus an access-weighted per-policy aggregate.  The observed ratio comes
+from the trace's own hit bits, so oracle and observation cover exactly
+the same window — the ring-capacity-bounded most-recent events, which is
+the honest caveat: regret is measured over the traced window, not over
+all time (size the ring to the window you mean to judge).
+
+Regret is >= 0 up to the window edge effect: OPT is optimal on the full
+stream it is given, and both sides here see the identical drained
+window.  ``ServeEngine.opt_regret()`` pushes the numbers into the
+metrics registry as sticky gauges (``tenant/<t>/opt_regret``,
+``policy/<name>/opt_regret``) — the first piece of the ROADMAP's
+policy-selection service.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.obs.decision_trace import KIND_ACCESS
+from repro.obs.metrics import safe_ratio
+
+__all__ = ["opt_hit_ratio", "regret_from_records"]
+
+
+def opt_hit_ratio(keys, capacity: int) -> float:
+    """Belady-optimal hit ratio of the ``keys`` stream at ``capacity``
+    (0.0 on an empty stream) — ``simulator.simulate("opt", ...)``, which
+    prepares the oracle's future-knowledge index automatically."""
+    keys = np.asarray(keys, dtype=np.int64)
+    if keys.size == 0:
+        return 0.0
+    from repro.core.simulator import simulate  # late: keeps imports acyclic
+
+    return simulate("opt", keys, int(capacity)).hit_ratio
+
+
+def regret_from_records(
+    records: np.ndarray,
+    capacities: Dict[int, int],
+) -> Tuple[Dict[int, Dict[str, float]], Dict[str, float]]:
+    """Per-row OPT regret from a drained decision trace.
+
+    Args:
+      records: structured array from ``decision_trace.drain`` (access
+        events are selected by ``kind == KIND_ACCESS``; admission events
+        are ignored here).
+      capacities: ``{row: capacity}`` for every row to judge (rows with
+        no trace events report zeros).
+
+    Returns:
+      ``(per_row, aggregate)`` — ``per_row[row]`` holds ``accesses`` /
+      ``observed`` / ``opt`` / ``regret`` for that row's traced window;
+      ``aggregate`` holds the access-weighted means over all rows
+      (``regret`` 0.0 when nothing was traced).  Pure host computation —
+      the one device sync already happened at ``drain``."""
+    acc_ev = records[records["kind"] == KIND_ACCESS]
+    per_row: Dict[int, Dict[str, float]] = {}
+    tot_acc = 0
+    w_obs = 0.0
+    w_opt = 0.0
+    for row, cap in capacities.items():
+        sel = acc_ev[acc_ev["row"] == row]
+        n = int(len(sel))
+        observed = safe_ratio(int(sel["hit"].sum()), n)
+        opt = opt_hit_ratio(sel["key"], cap) if n else 0.0
+        per_row[row] = {
+            "accesses": n,
+            "observed": observed,
+            "opt": opt,
+            "regret": opt - observed,
+        }
+        tot_acc += n
+        w_obs += observed * n
+        w_opt += opt * n
+    aggregate = {
+        "accesses": tot_acc,
+        "observed": safe_ratio(w_obs, tot_acc),
+        "opt": safe_ratio(w_opt, tot_acc),
+        "regret": safe_ratio(w_opt - w_obs, tot_acc),
+    }
+    return per_row, aggregate

@@ -1,0 +1,50 @@
+"""Host-side wall-clock timing spans, registry-mounted (DESIGN.md §11).
+
+The overhead half of the paper's low-overhead claim needs the serving
+stack to observe ITSELF: ``SpanSet.span(name)`` is a context manager
+accumulating call counts and wall seconds per named section (prefill,
+decode, rebalance, trace drain), and ``metrics()`` is a registry provider
+so the totals ride the same flat snapshot as the cache counters
+(``span/<name>/calls``, ``span/<name>/seconds``, ``span/<name>/max_s``).
+
+These are HOST timings around device work — they include dispatch and
+any sync the wrapped section performs, which is the serving-relevant
+number.  Spans never appear inside jitted code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict
+
+
+class SpanSet:
+    """Accumulates per-name wall-clock spans: ``calls`` / ``seconds`` /
+    ``max_s``.  Mutable host object — use one per engine; not thread-safe
+    (the serving engine is single-threaded by construction)."""
+
+    def __init__(self):
+        self._acc: Dict[str, list] = {}
+
+    @contextlib.contextmanager
+    def span(self, name: str):
+        """Time one ``with``-scoped section under ``name``; exceptions
+        propagate but the elapsed time is still recorded."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            acc = self._acc.setdefault(name, [0, 0.0, 0.0])
+            acc[0] += 1
+            acc[1] += dt
+            acc[2] = max(acc[2], dt)
+
+    def metrics(self) -> Dict[str, Dict[str, float]]:
+        """Registry provider: ``{name: {calls, seconds, max_s}}`` (host
+        values — nothing to pull)."""
+        return {
+            name: {"calls": c, "seconds": s, "max_s": m}
+            for name, (c, s, m) in self._acc.items()
+        }

@@ -51,6 +51,8 @@ from repro.cache import paged_kv
 from repro.cache.paged_kv import AdaptivePagedPool
 from repro.cache.prefix_cache import PrefixCache
 from repro.models import model as M
+from repro.obs.metrics import Derived, Registry, loop_planes, loop_update, safe_ratio
+from repro.obs.spans import SpanSet
 from repro.serve.sampling import sample, sample_traced
 from repro.serve.tenancy import (
     DEFER,
@@ -123,7 +125,8 @@ class ServeEngine:
                  tenants: Optional[Dict[str, int]] = None,
                  admission: Optional[AdmissionController] = None,
                  auto_rebalance: bool = False, jit_loop: bool = True,
-                 mesh=None, fused: bool = False):
+                 mesh=None, fused: bool = False, metrics: bool = True,
+                 decision_trace: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -140,6 +143,11 @@ class ServeEngine:
         #: loop then keeps the buffers device-resident under that placement
         #: for its whole scan (donation reuses the sharded buffers in place)
         self.mesh = mesh
+        if decision_trace and self.tenants is None:
+            raise ValueError(
+                "decision_trace records the tenancy core's per-access "
+                "events; construct the engine with tenants={...}"
+            )
         if self.tenants is None:
             # prefix_policy may be a name or a prebuilt policy instance —
             # both resolve through the unified factory inside PrefixCache
@@ -149,7 +157,8 @@ class ServeEngine:
         else:
             self.prefix_cache = None
             self.tenant_cache = TenantPrefixCache(
-                self.tenants, prefix_policy, mesh=mesh
+                self.tenants, prefix_policy, mesh=mesh,
+                ring_capacity=int(decision_trace),
             )
             self.admission = admission or AdmissionController()
         #: optional ExpertCacheRuntime the model's MoE router reports into
@@ -174,6 +183,21 @@ class ServeEngine:
         #: order) + per-tenant ghost-hit counters
         self._kv_sessions: Dict[str, list] = {}
         self._kv_ghost_hits: Dict[str, int] = {}
+        # -- observability layer (DESIGN.md §11) ----------------------------
+        #: loop-metric planes carried through the jitted decode loop (or
+        #: folded per step by the host loop — same jitted update, so the
+        #: planes are bit-identical across the modes); None with metrics off
+        self.metrics = bool(metrics)
+        self._planes = loop_planes() if self.metrics else None
+        self._fold = jax.jit(functools.partial(loop_update, vocab=cfg.vocab))
+        #: host timing spans around the serving sections (prefill / decode /
+        #: rebalance / trace_drain) — mounted on the registry like the caches
+        self.spans = SpanSet()
+        #: the unified metrics registry: every telemetry surface the engine
+        #: holds mounts a provider; ``telemetry()`` is ONE flat snapshot
+        #: with a single batched device pull (zero per-step syncs)
+        self.registry = Registry()
+        self._mount_providers()
 
     # -- internals ----------------------------------------------------------
     def _align(self, prompt: List[int]) -> List[int]:
@@ -198,7 +222,8 @@ class ServeEngine:
             batch["frames"] = jnp.zeros(
                 (B, S // self.cfg.enc_seq_divisor, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
-        logits, caches = self._prefill(self.params, batch)
+        with self.spans.span("prefill"):
+            logits, caches = self._prefill(self.params, batch)
         self.stats["prefills"] += 1
         return logits, caches
 
@@ -222,6 +247,37 @@ class ServeEngine:
     def _build_loop(self, steps: int):
         cfg, kv_mode = self.cfg, self.kv_mode
         fused, mesh = self.fused, self.mesh
+
+        if self.metrics:
+            # metrics variant: the loop planes are one more donated carry —
+            # folded after every sampling event (first greedy token
+            # included) by the same jitted `loop_update` the host loop
+            # applies per step, so the planes are bit-identical across the
+            # loop modes (integer adds / scatter-adds only)
+            @functools.partial(jax.jit, donate_argnums=(2, 3, 5))
+            def loop(params, logits, caches, key, temperature, planes):
+                toks = sample(logits[:, -1:], key, temperature=0.0,
+                              vocab=cfg.vocab)
+                planes = loop_update(planes, toks, vocab=cfg.vocab)
+
+                def body(carry, _):
+                    t, c, k, pl = carry
+                    k, sub = jax.random.split(k)
+                    lg, c = M.decode_step(params, cfg, t, c, kv_mode=kv_mode,
+                                          fused=fused, mesh=mesh)
+                    t = sample_traced(lg, sub, temperature, vocab=cfg.vocab)
+                    pl = loop_update(pl, t, vocab=cfg.vocab)
+                    return (t, c, k, pl), t
+
+                (_, caches, key, planes), ys = jax.lax.scan(
+                    body, (toks, caches, key, planes), None, length=steps - 1
+                )
+                gen = jnp.concatenate(
+                    [toks, jnp.moveaxis(ys[..., 0], 0, 1)], axis=1
+                )
+                return gen, caches, key, planes
+
+            return loop
 
         @functools.partial(jax.jit, donate_argnums=(2, 3))
         def loop(params, logits, caches, key, temperature):
@@ -286,36 +342,117 @@ class ServeEngine:
         if states:
             self._kv_sessions[tenant] = states
 
-    # -- public -------------------------------------------------------------
-    def telemetry(self) -> Dict[str, dict]:
-        """Per-policy hit ratios for every cache the engine serves from,
-        reported through one code path: each cache exposes the same
-        ``telemetry()`` dict (policy name, accesses, hit_ratio).  Keys are
-        namespaced by cache layer — ``prefix/...``, ``kv/...``,
-        ``expert/...`` — so two caches running the same policy never
-        collide.  Multi-tenant engines report one ``prefix/<tenant>`` entry
-        per tenant (quota, occupancy, pressure, hit ratio — the manager's
-        per-row device accounting) and, in the true-adaptive paged mode, a
-        ``kv/<tenant>`` entry with the ghost-hit feed's adaptation state."""
-        out: Dict[str, dict] = {"engine": dict(self.stats)}
+    # -- observability mounts (DESIGN.md §11) -------------------------------
+    def _mount_providers(self) -> None:
+        """Mount every telemetry surface the engine holds onto the unified
+        registry.  Providers read ``self`` dynamically (an expert cache
+        attached after construction appears at the next snapshot) and
+        return device arrays UN-pulled — the snapshot's single batched
+        ``device_get`` is the only sync."""
+        self.registry.mount("serve", self._serve_provider)
         if self.tenants is None:
-            out["prefix/cache"] = self.prefix_cache.telemetry()
+            self.registry.mount(
+                "prefix", lambda: self.prefix_cache.telemetry()
+            )
         else:
-            for t, d in self.tenant_cache.telemetry().items():
-                out[f"prefix/{t}"] = d
-        if self.kv_mode == "paged":
-            out["kv/pool"] = {"policy": self.cfg.kv_policy,
-                              "pages": self.cfg.bounded_kv_pages}
-            for t, states in self._kv_sessions.items():
-                p_mean = float(np.mean([np.asarray(s.p).mean()
-                                        for s in states]))
-                out[f"kv/{t}"] = {
-                    "policy": self.cfg.kv_policy,
-                    "ghost_hits": self._kv_ghost_hits.get(t, 0),
-                    "p_mean": p_mean,
-                }
-        if self.expert_cache is not None:
-            out["expert/cache"] = self.expert_cache.telemetry()
+            self.registry.mount("tenant", self._tenant_provider)
+        self.registry.mount("kv", self._kv_provider)
+        self.registry.mount(
+            "expert",
+            lambda: (
+                self.expert_cache.telemetry()
+                if self.expert_cache is not None
+                else {}
+            ),
+        )
+        self.registry.mount("span", self.spans.metrics)
+
+    def _serve_provider(self) -> dict:
+        out: dict = dict(self.stats)
+        if self._planes is not None:
+            out["loop"] = dict(self._planes)
+        return out
+
+    def _tenant_provider(self) -> dict:
+        mgr = self.tenant_cache.manager
+        rows = mgr.row_metrics()  # (rows,) device arrays — not pulled here
+        ratio = Derived(lambda g: safe_ratio(g["hits"], g["accesses"]))
+        out = {}
+        for t in mgr.tenants:
+            r = mgr.row(t)
+            out[t] = {
+                "policy": mgr.policy_name,
+                "quota": mgr.quotas[t],
+                "entries": len(self.tenant_cache.stores[t]),
+                "occupancy": rows["occupancy"][r],
+                "hits": rows["hits"][r],
+                "misses": rows["misses"][r],
+                "evictions": rows["evictions"][r],
+                "accesses": rows["accesses"][r],
+                "pressure": rows["pressure"][r],
+                "hit_ratio": ratio,
+            }
+        return out
+
+    def _kv_provider(self) -> dict:
+        if self.kv_mode != "paged":
+            return {}
+        out: dict = {"pool": {"policy": self.cfg.kv_policy,
+                              "pages": self.cfg.bounded_kv_pages}}
+        for t, states in self._kv_sessions.items():
+            tel = [paged_kv.pool_telemetry(s) for s in states]
+            out[t] = {
+                "policy": self.cfg.kv_policy,
+                "ghost_hits": self._kv_ghost_hits.get(t, 0),
+                "p_mean": jnp.mean(jnp.stack([x["p_mean"] for x in tel])),
+                "p_max": jnp.max(jnp.stack([x["p_max"] for x in tel])),
+            }
+        return out
+
+    # -- public -------------------------------------------------------------
+    def telemetry(self) -> Dict[str, object]:
+        """ONE flat namespaced snapshot of every metrics surface the engine
+        serves from (``Registry.snapshot`` — DESIGN.md §11): engine counters
+        and decode-loop planes under ``serve/...``, the prompt cache under
+        ``prefix/...`` (single-tenant) or ``tenant/<name>/...``, the paged
+        KV pool and ghost-hit feed under ``kv/...``, the MoE expert cache
+        under ``expert/...``, host timing spans under ``span/...``, and any
+        OPT-regret gauges (``opt_regret()``).  Every per-tenant hit ratio is
+        the exact float64 division of the pulled int counters; the whole
+        snapshot costs exactly one batched ``jax.device_get``."""
+        return self.registry.snapshot()
+
+    def drain_decision_trace(self) -> np.ndarray:
+        """Pull the decision-trace ring (``decision_trace=N`` engines) to
+        host as a structured record array — chronological per-access and
+        per-admission policy events (``obs.decision_trace``)."""
+        if self.tenants is None:
+            raise ValueError("decision tracing needs a multi-tenant engine")
+        with self.spans.span("trace_drain"):
+            return self.tenant_cache.manager.drain_trace()
+
+    def opt_regret(self) -> Dict[str, dict]:
+        """OPT-regret telemetry: drain the decision trace, replay each
+        tenant's recorded key stream through the offline Belady oracle at
+        that tenant's quota, and publish ``opt − observed`` hit-ratio regret
+        as sticky registry gauges (``tenant/<t>/opt_regret`` plus the
+        access-weighted ``policy/<name>/opt_regret``).  Returns the detailed
+        per-tenant numbers (``obs.opt_oracle.regret_from_records``)."""
+        from repro.obs.opt_oracle import regret_from_records
+
+        records = self.drain_decision_trace()
+        mgr = self.tenant_cache.manager
+        caps = {mgr.row(t): mgr.quotas[t] for t in mgr.tenants}
+        per_row, aggregate = regret_from_records(records, caps)
+        out = {}
+        for t in mgr.tenants:
+            info = per_row[mgr.row(t)]
+            self.registry.set_gauge(f"tenant/{t}/opt_regret", info["regret"])
+            out[t] = info
+        self.registry.set_gauge(
+            f"policy/{mgr.policy_name}/opt_regret", aggregate["regret"]
+        )
+        out["aggregate"] = aggregate
         return out
 
     def _admit(self, requests: List[Request]) -> List[str]:
@@ -409,7 +546,8 @@ class ServeEngine:
         coldest = mgr.rank_tenants()[0]
         if coldest == tenant:
             return
-        moved, _ = self.tenant_cache.rebalance(tenant, 1)
+        with self.spans.span("rebalance"):
+            moved, _ = self.tenant_cache.rebalance(tenant, 1)
         self.stats["rebalances"] += moved
 
     def _lookup_prefix(self, req: Request):
@@ -492,23 +630,34 @@ class ServeEngine:
         caches = self._shard_caches(caches, len(reqs))
         if self.jit_loop:
             loop = self._get_loop(max_new)
-            gen_dev, caches, self.key = loop(
-                self.params, logits, caches, self.key,
-                jnp.float32(reqs[0].temperature))
+            with self.spans.span("decode"):
+                if self.metrics:
+                    gen_dev, caches, self.key, self._planes = loop(
+                        self.params, logits, caches, self.key,
+                        jnp.float32(reqs[0].temperature), self._planes)
+                else:
+                    gen_dev, caches, self.key = loop(
+                        self.params, logits, caches, self.key,
+                        jnp.float32(reqs[0].temperature))
             self.stats["decode_steps"] += max_new - 1
             gen = np.asarray(gen_dev)
         else:
-            toks = sample(logits[:, -1:], self.key, temperature=0.0,
-                          vocab=self.cfg.vocab)
-            generated = [toks]
-            for step in range(max_new - 1):
-                self.key, sub = jax.random.split(self.key)
-                logits, caches = self._decode(self.params, toks, caches)
-                toks = sample(logits, sub,
-                              temperature=reqs[0].temperature,
+            with self.spans.span("decode"):
+                toks = sample(logits[:, -1:], self.key, temperature=0.0,
                               vocab=self.cfg.vocab)
-                generated.append(toks)
-                self.stats["decode_steps"] += 1
+                if self.metrics:
+                    self._planes = self._fold(self._planes, toks)
+                generated = [toks]
+                for step in range(max_new - 1):
+                    self.key, sub = jax.random.split(self.key)
+                    logits, caches = self._decode(self.params, toks, caches)
+                    toks = sample(logits, sub,
+                                  temperature=reqs[0].temperature,
+                                  vocab=self.cfg.vocab)
+                    if self.metrics:
+                        self._planes = self._fold(self._planes, toks)
+                    generated.append(toks)
+                    self.stats["decode_steps"] += 1
             gen = np.concatenate([np.asarray(t) for t in generated], axis=1)
         if single and self._ghost_feed_on:
             self._kv_persist(caches, reqs[0].tenant_id)

@@ -60,6 +60,8 @@ from repro.core.policy_core import (
     admission_decay,
     admission_decide,
 )
+from repro.obs import decision_trace as _dt
+from repro.obs.metrics import safe_ratio
 
 __all__ = [
     "TenantCacheManager",
@@ -98,6 +100,7 @@ class TenantCacheManager:
         *,
         pressure_alpha: float = 0.1,
         mesh=None,
+        ring_capacity: int = 0,
     ):
         if not quotas:
             raise ValueError("need at least one tenant")
@@ -125,6 +128,11 @@ class TenantCacheManager:
         self._tf = np.zeros(len(self.tenants), dtype=np.int64)
         self._tr = np.zeros(len(self.tenants), dtype=np.int64)
         self._tclock = 0
+        # optional decision-trace ring (obs.decision_trace): every access
+        # and admission decision is recorded device-side, zero host syncs,
+        # drained via ``drain_trace``.  Replicated (never sharded) — it is
+        # byte-sized and the push order is the scan order either way.
+        self.ring = _dt.ring_init(ring_capacity) if ring_capacity else None
         self.core = self._build_core()
         self.state = self.core.init(mesh=mesh)
         self.counters: RowCounters = self.core.init_counters(mesh=mesh)
@@ -169,6 +177,12 @@ class TenantCacheManager:
         pressure EWMA alpha is baked in: the step updates the device
         pressure plane alongside the hit/miss/eviction counters."""
         core, alpha = self.core, self.pressure_alpha
+        if self.ring is not None:
+            return jax.jit(
+                lambda st, ctr, ids, act, ring: core.on_access_counted(
+                    st, ctr, ids, active=act, pressure_alpha=alpha, ring=ring
+                )
+            )
         return jax.jit(
             lambda st, ctr, ids, act: core.on_access_counted(
                 st, ctr, ids, active=act, pressure_alpha=alpha
@@ -211,9 +225,14 @@ class TenantCacheManager:
         before = self._resident_ids(self.state, r)
         active = jnp.arange(self.core.rows) == r
         ids = jnp.full((self.core.rows,), int(key), dtype=jnp.int32)
-        self.state, self.counters, hit = self._step(
-            self.state, self.counters, ids, active
-        )
+        if self.ring is not None:
+            self.state, self.counters, hit, self.ring = self._step(
+                self.state, self.counters, ids, active, self.ring
+            )
+        else:
+            self.state, self.counters, hit = self._step(
+                self.state, self.counters, ids, active
+            )
         after = self._resident_ids(self.state, r)
         evicted = sorted(before - after)
         # pressure EWMA advanced on device by the step itself; pull mirror
@@ -245,20 +264,37 @@ class TenantCacheManager:
         alpha = self.pressure_alpha
         ctr_before = jax.tree.map(np.asarray, self.counters)
 
-        def body(carry, xs):
-            state, ctr = carry
-            row, key = xs
-            active = jnp.arange(R) == row
-            state, ctr, hit = core.on_access_counted(
-                state, ctr, jnp.full((R,), key, dtype=jnp.int32),
-                active=active, pressure_alpha=alpha,
-            )
-            return (state, ctr), hit[row]
+        xs_dev = (jnp.asarray(tenant_rows), jnp.asarray(keys))
+        if self.ring is not None:
+            # ring rides the scan carry next to the counters — recording
+            # stays inside the one jitted program, zero per-access syncs
+            def body(carry, xs):
+                state, ctr, ring = carry
+                row, key = xs
+                active = jnp.arange(R) == row
+                state, ctr, hit, ring = core.on_access_counted(
+                    state, ctr, jnp.full((R,), key, dtype=jnp.int32),
+                    active=active, pressure_alpha=alpha, ring=ring,
+                )
+                return (state, ctr, ring), hit[row]
 
-        (self.state, self.counters), hits = jax.lax.scan(
-            body, (self.state, self.counters), (jnp.asarray(tenant_rows),
-                                                jnp.asarray(keys))
-        )
+            (self.state, self.counters, self.ring), hits = jax.lax.scan(
+                body, (self.state, self.counters, self.ring), xs_dev
+            )
+        else:
+            def body(carry, xs):
+                state, ctr = carry
+                row, key = xs
+                active = jnp.arange(R) == row
+                state, ctr, hit = core.on_access_counted(
+                    state, ctr, jnp.full((R,), key, dtype=jnp.int32),
+                    active=active, pressure_alpha=alpha,
+                )
+                return (state, ctr), hit[row]
+
+            (self.state, self.counters), hits = jax.lax.scan(
+                body, (self.state, self.counters), xs_dev
+            )
         self._pull_pressure()
         # tenant-altitude AWRP metadata: F from the counter deltas, R from
         # the stream's own order
@@ -426,12 +462,18 @@ class TenantCacheManager:
         return evicted
 
     # -- telemetry ----------------------------------------------------------
+    def row_metrics(self) -> Dict[str, jax.Array]:
+        """The core's per-row accounting as UN-pulled ``(rows,)`` device
+        arrays — the obs registry's provider surface (the snapshot batches
+        these into its single ``device_get``).  Read-only; zero syncs."""
+        return self.core.row_telemetry(self.state, self.counters)
+
     def row_telemetry(self) -> Dict[str, np.ndarray]:
         """The core's per-row accounting, pulled to host: hits / misses /
         evictions / accesses / occupancy / capacity / pressure, each
-        ``(rows,)``.  Read-only (one device sync; mutates nothing)."""
-        t = self.core.row_telemetry(self.state, self.counters)
-        return {k: np.asarray(v) for k, v in t.items()}
+        ``(rows,)``.  Read-only; ONE batched ``jax.device_get`` over the
+        whole dict, never one sync per key."""
+        return jax.device_get(self.row_metrics())
 
     def telemetry(self) -> Dict[str, dict]:
         """Per-tenant stats dicts, same shape for every tenant — the one
@@ -440,7 +482,6 @@ class TenantCacheManager:
         out = {}
         for t in self.tenants:
             r = self.row(t)
-            acc = int(rows["accesses"][r])
             out[t] = {
                 "policy": self.policy_name,
                 "quota": self.quotas[t],
@@ -448,11 +489,24 @@ class TenantCacheManager:
                 "hits": int(rows["hits"][r]),
                 "misses": int(rows["misses"][r]),
                 "evictions": int(rows["evictions"][r]),
-                "accesses": acc,
-                "hit_ratio": int(rows["hits"][r]) / acc if acc else 0.0,
+                "accesses": int(rows["accesses"][r]),
+                "hit_ratio": safe_ratio(
+                    int(rows["hits"][r]), int(rows["accesses"][r])
+                ),
                 "pressure": float(self._pressure[r]),
             }
         return out
+
+    def drain_trace(self) -> np.ndarray:
+        """Pull the decision-trace ring to host as a structured record array
+        (chronological; see ``obs.decision_trace.drain``).  Requires the
+        manager to have been built with ``ring_capacity > 0``."""
+        if self.ring is None:
+            raise ValueError(
+                "decision tracing is off; construct the manager with "
+                "ring_capacity > 0"
+            )
+        return _dt.drain(self.ring)
 
 
 @dataclasses.dataclass
@@ -508,7 +562,13 @@ class AdmissionController:
 
         Mutates ``manager.counters.pressure`` (the sheds' decays) and
         refreshes the mirror; returns one ``"accept"/"defer"/"shed"``
-        string per request, in order."""
+        string per request, in order.
+
+        When the manager carries a decision-trace ring, each admission is
+        also recorded as one KIND_ADMIT event (row, pressure before/after
+        the decision's decay, the ADMIT_* code) inside the same jitted
+        scan — recording changes no decision (the codes are computed from
+        the identical pressure carry either way)."""
         rows = np.asarray([manager.row(t) for t in tenants], dtype=np.int32)
         if rows.size == 0:
             return []
@@ -518,9 +578,15 @@ class AdmissionController:
             self.warmup,
             manager.pressure_alpha,
             manager.core.rows,
+            manager.ring is not None,
         )
         acc = manager.counters.hits + manager.counters.misses
-        codes, new_p = fn(manager.counters.pressure, acc, jnp.asarray(rows))
+        if manager.ring is not None:
+            codes, new_p, manager.ring = fn(
+                manager.counters.pressure, acc, jnp.asarray(rows), manager.ring
+            )
+        else:
+            codes, new_p = fn(manager.counters.pressure, acc, jnp.asarray(rows))
         manager.counters = manager.counters._replace(pressure=new_p)
         manager._pull_pressure()
         order = (ACCEPT, DEFER, SHED)  # indexed by ADMIT_* codes
@@ -528,25 +594,51 @@ class AdmissionController:
 
 
 @functools.lru_cache(maxsize=None)
-def _decide_batch_fn(defer_at, shed_at, warmup, alpha, rows):
+def _decide_batch_fn(defer_at, shed_at, warmup, alpha, rows, with_ring=False):
     """Jitted batch-admission program, cached per (thresholds, alpha, rows).
 
     Sequential by construction: the scan carries the pressure plane so a
     shed's probation decay is visible to every later request in the batch —
-    the same ordering contract as the host per-request loop."""
+    the same ordering contract as the host per-request loop.  With
+    ``with_ring`` the decision-trace ring rides the carry too and each
+    request appends one KIND_ADMIT event; the decision math is untouched."""
+
+    def decide_one(p, accesses, r):
+        code = admission_decide(
+            p[r],
+            accesses[r],
+            defer_at=defer_at,
+            shed_at=shed_at,
+            warmup=warmup,
+        )
+        shed_here = (jnp.arange(rows) == r) & (code == ADMIT_SHED)
+        return admission_decay(p, shed_here, alpha), code
+
+    if with_ring:
+
+        @jax.jit
+        def fn(pressure, accesses, req_rows, ring):
+            def body(carry, r):
+                p, rg = carry
+                p_new, code = decide_one(p, accesses, r)
+                ev = _dt.pack_events(
+                    1, kind=_dt.KIND_ADMIT, row=r, key=-1,
+                    p_before=p[r], p_after=p_new[r], admit=code,
+                )
+                rg = _dt.ring_push(rg, ev, jnp.ones((1,), dtype=bool))
+                return (p_new, rg), code
+
+            (p_final, ring), codes = jax.lax.scan(
+                body, (pressure, ring), req_rows
+            )
+            return codes, p_final, ring
+
+        return fn
 
     @jax.jit
     def fn(pressure, accesses, req_rows):
         def body(p, r):
-            code = admission_decide(
-                p[r],
-                accesses[r],
-                defer_at=defer_at,
-                shed_at=shed_at,
-                warmup=warmup,
-            )
-            shed_here = (jnp.arange(rows) == r) & (code == ADMIT_SHED)
-            return admission_decay(p, shed_here, alpha), code
+            return decide_one(p, accesses, r)
 
         p_final, codes = jax.lax.scan(body, pressure, req_rows)
         return codes, p_final

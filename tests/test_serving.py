@@ -248,17 +248,17 @@ def test_engine_telemetry_one_code_path(engine):
     collide in the merged dict."""
     engine.generate([Request(50, list(range(2, 18)), max_new_tokens=2)])
     t = engine.telemetry()
-    assert t["prefix/cache"]["policy"] == "awrp"
-    assert {"hits", "misses", "hit_ratio"} <= set(t["prefix/cache"])
-    assert t["engine"]["prefills"] >= 1
-    assert "expert/cache" not in t  # none attached on this config
+    assert t["prefix/policy"] == "awrp"
+    assert {"prefix/hits", "prefix/misses", "prefix/hit_ratio"} <= set(t)
+    assert t["serve/prefills"] >= 1
+    assert not any(k.startswith("expert/") for k in t)  # none attached
     rt = ExpertCacheRuntime(n_layers=1, capacity=2, policy="awrp")
     engine.expert_cache = rt
     rt.route(0, [5])
     t = engine.telemetry()
     # same policy name in two layers -> two distinct namespaced keys
-    assert t["expert/cache"]["policy"] == t["prefix/cache"]["policy"] == "awrp"
-    assert t["expert/cache"]["transfers"] == 1
+    assert t["expert/policy"] == t["prefix/policy"] == "awrp"
+    assert t["expert/transfers"] == 1
 
 
 @pytest.mark.parametrize("kv_policy", ["arc_adaptive", "car_adaptive"])
@@ -273,7 +273,7 @@ def test_bounded_kv_true_adaptive_engine_runs_past_pool_capacity(kv_policy):
     eng = ServeEngine(cfg, params, max_len=128, kv_mode="paged")
     out = eng.generate([Request(0, list(range(1, 17)), max_new_tokens=40)])
     assert len(out[0].tokens) == 40  # decoded far past 3*8=24 resident tokens
-    assert eng.telemetry()["kv/pool"]["policy"] == kv_policy
+    assert eng.telemetry()["kv/pool/policy"] == kv_policy
 
 
 # ---------------------------------------------------------------------------
@@ -322,13 +322,13 @@ def test_two_tenant_hit_ratios_match_host_oracles(engine):
         expect[r.tenant_id][1] += 1
     t = eng.telemetry()
     for tenant in quotas:
-        tel = t[f"prefix/{tenant}"]
-        assert tel["accesses"] == expect[tenant][1]
-        assert tel["hits"] == expect[tenant][0], (tenant, tel)
-        assert tel["hit_ratio"] == expect[tenant][0] / expect[tenant][1]
+        assert t[f"tenant/{tenant}/accesses"] == expect[tenant][1]
+        assert t[f"tenant/{tenant}/hits"] == expect[tenant][0], (tenant, t)
+        assert t[f"tenant/{tenant}/hit_ratio"] == (
+            expect[tenant][0] / expect[tenant][1])
     # the hog thrashes (quota 1, distinct prompts): pressure near 1
-    assert t["prefix/hog"]["pressure"] > 0.3
-    assert t["prefix/good"]["pressure"] < t["prefix/hog"]["pressure"]
+    assert t["tenant/hog/pressure"] > 0.3
+    assert t["tenant/good/pressure"] < t["tenant/hog/pressure"]
 
 
 def test_admission_sheds_hog_without_perturbing_other_tenant(engine):
@@ -357,10 +357,10 @@ def test_admission_sheds_hog_without_perturbing_other_tenant(engine):
                                    tenant_id="good")])
     assert "shed" in statuses["hog"]  # pressure crossed shed_at
     assert all(s == "ok" for s in statuses["good"])
-    both = eng.telemetry()["prefix/good"]
-    alone = solo.telemetry()["prefix/good"]
-    assert both["hits"] == alone["hits"]
-    assert both["hit_ratio"] == alone["hit_ratio"]
+    both = eng.telemetry()
+    alone = solo.telemetry()
+    assert both["tenant/good/hits"] == alone["tenant/good/hits"]
+    assert both["tenant/good/hit_ratio"] == alone["tenant/good/hit_ratio"]
     assert eng.stats["shed"] >= 1
 
 
@@ -434,9 +434,12 @@ def test_deferred_then_completed_matches_unpressured_telemetry(engine):
         assert d[i].status == "deferred" and o[i].status == "ok"
         assert d[i].tokens == o[i].tokens
         assert d[i].prefill_cached == o[i].prefill_cached
-    td = deferred_eng.telemetry()["prefix/t"]
-    tp = plain_eng.telemetry()["prefix/t"]
-    assert td == tp  # counters identical: hits/misses/evictions/pressure/...
+    td = deferred_eng.telemetry()
+    tp = plain_eng.telemetry()
+    keys = {k for k in td if k.startswith("tenant/t/")}
+    assert keys == {k for k in tp if k.startswith("tenant/t/")}
+    # counters identical: hits/misses/evictions/pressure/occupancy/...
+    assert {k: td[k] for k in keys} == {k: tp[k] for k in keys}
     sd, sp = dict(deferred_eng.stats), dict(plain_eng.stats)
     assert sd.pop("deferred") == len(prompts) and sp.pop("deferred") == 0
     assert sd == sp
@@ -497,6 +500,6 @@ def test_ghost_hit_feed_adapts_p_under_prefix_reuse():
         states = eng._kv_sessions["a"]
         p_max.append(max(float(np.asarray(s.p).max()) for s in states))
     t = eng.telemetry()
-    assert t["kv/a"]["ghost_hits"] > 0  # the feed fired
-    assert eng.stats["kv_ghost_hits"] == t["kv/a"]["ghost_hits"]
+    assert t["kv/a/ghost_hits"] > 0  # the feed fired
+    assert eng.stats["kv_ghost_hits"] == t["kv/a/ghost_hits"]
     assert max(p_max) > 0.0  # p moved (provably static in pure decode)

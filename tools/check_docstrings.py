@@ -23,7 +23,7 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 TARGETS = ("src/repro/serve", "src/repro/core", "src/repro/cache",
-           "src/repro/kernels", "benchmarks")
+           "src/repro/kernels", "src/repro/obs", "benchmarks")
 
 
 def _missing(tree: ast.Module, path: pathlib.Path):

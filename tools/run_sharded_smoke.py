@@ -49,7 +49,8 @@ def main(argv=None) -> int:
          [sys.executable, "-m", "pytest", "-x", "-q",
           os.path.join(REPO, "tests", "test_sharding.py"),
           "-m", "not slow",
-          os.path.join(REPO, "tests", "test_policy_attn.py")]),
+          os.path.join(REPO, "tests", "test_policy_attn.py"),
+          os.path.join(REPO, "tests", "test_obs.py")]),
         ("sharded sweep bench (parity gate + scaling record)",
          [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
           "--sections", "sharded_sweep", "--smoke"]),
