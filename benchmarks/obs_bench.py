@@ -14,9 +14,17 @@ Two measurements:
   replay on a multi-tenant engine with a live ring — the request-boundary
   costs a deployment actually pays.
 
+The timed rounds double as the retrace-flatness gate (DESIGN.md §12):
+the warmup compiles the one ``steps`` bucket, and the instrumented
+engine's ``compile/decode_loop/count`` sentinel must stay FLAT across
+every timed ``generate`` batch — a retrace inside the timing loop means
+the loop cache keyed on something it shouldn't (the pre-PR-8
+temperature bug's exact signature) and fails the bench.
+
 Also emits the sample exporter artifacts the CI bench-smoke job uploads
-(``obs_snapshot.prom`` / ``obs_snapshot.jsonl``) and merges the
-``obs_overhead`` record into ``--sweep-json``.
+(``artifacts/obs_snapshot.prom`` / ``artifacts/obs_snapshot.jsonl`` —
+an output dir, not the CWD) and merges the ``obs_overhead`` record into
+``--sweep-json``.
 """
 
 from __future__ import annotations
@@ -43,6 +51,9 @@ from repro.serve.engine import Request, ServeEngine
 #: hard gate: instrumented throughput must stay within 5% of bare
 MAX_OVERHEAD = 0.05
 
+#: sample exporter artifacts land here, never in the CWD
+ARTIFACTS_DIR = "artifacts"
+
 
 def _requests(n: int, cfg, new_tokens: int):
     """Distinct same-length prompts: one bucket shape, one compile, no
@@ -60,15 +71,27 @@ def _best_interleaved(engines, reqs, rounds: int = 8):
     passes round-robin and keep each engine's best wall time.  The
     interleaving + best-of damps host scheduling noise symmetrically, so
     the gate binds on real overhead, not on which engine ran while the
-    machine was colder."""
+    machine was colder.
+
+    Retrace-flatness gate: after the warmup pass the decode-loop
+    sentinel's trace count must stay FLAT through every timed round —
+    same prompts, same bucket, so any growth is a genuine retrace
+    regression and fails the bench immediately."""
     for e in engines:
         e.generate([dataclasses.replace(r) for r in reqs])
+    warm = [e._loop_sentinel.traces for e in engines]
     best = [float("inf")] * len(engines)
     for _ in range(rounds):
         for i, e in enumerate(engines):
             t0 = time.perf_counter()
             e.generate([dataclasses.replace(r) for r in reqs])
             best[i] = min(best[i], time.perf_counter() - t0)
+            if e._loop_sentinel.traces != warm[i]:
+                raise AssertionError(
+                    f"decode loop retraced during timed rounds: "
+                    f"compile/decode_loop/count went {warm[i]} -> "
+                    f"{e._loop_sentinel.traces} on identical batches"
+                )
     return best
 
 
@@ -129,13 +152,16 @@ def run(out_lines=None, smoke: bool = False, sweep_json=None):
           f"opt regret {us_regret:.0f} us "
           f"(aggregate {regret['aggregate']['regret']:.2f})")
 
-    # sample exporter artifacts (uploaded by the CI bench-smoke job)
+    # sample exporter artifacts (uploaded by the CI bench-smoke job) —
+    # into the artifacts/ output dir, never the CWD
     tel = eng.telemetry()  # re-pull: includes the opt_regret gauges
-    with open("obs_snapshot.prom", "w") as fh:
+    os.makedirs(ARTIFACTS_DIR, exist_ok=True)
+    prom = os.path.join(ARTIFACTS_DIR, "obs_snapshot.prom")
+    jsonl = os.path.join(ARTIFACTS_DIR, "obs_snapshot.jsonl")
+    with open(prom, "w") as fh:
         fh.write(prometheus_text(tel))
-    append_jsonl("obs_snapshot.jsonl", tel,
-                 extra={"arch": cfg.name, "decision_trace": 256})
-    print("(sample snapshot written to obs_snapshot.prom / obs_snapshot.jsonl)")
+    append_jsonl(jsonl, tel, extra={"arch": cfg.name, "decision_trace": 256})
+    print(f"(sample snapshot written to {prom} / {jsonl})")
 
     if out_lines is not None:
         out_lines.append(
@@ -148,6 +174,7 @@ def run(out_lines=None, smoke: bool = False, sweep_json=None):
         record = {
             "n_requests": n_reqs,
             "new_tokens": new_tokens,
+            "cpu_count": os.cpu_count(),
             "requests_per_sec": {"metrics_on": round(rps_on, 2),
                                  "metrics_off": round(rps_off, 2)},
             "overhead_frac": round(overhead, 4),

@@ -35,26 +35,13 @@ import numpy as np
 from repro.cache import paged_kv
 from repro.core import sharding
 from repro.kernels import ops
+# the shared eqn counter (also behind the always-on compile/<fn>/eqns
+# sentinel audits — DESIGN.md §12): recurses nested jaxprs, counts a
+# pallas_call as ONE launch
+from repro.obs.profiling import count_eqns as _count_eqns
 
 KVH, G, HD = 2, 2, 8
 KVD = KVH * HD
-
-
-def _count_eqns(jaxpr) -> int:
-    """Total equations in a (closed) jaxpr, recursing into nested jaxprs in
-    eqn params (scan/cond/jit bodies) but NOT into a pallas_call's kernel —
-    the kernel body is one launch, which is the point being measured."""
-    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
-    n = 0
-    for eqn in jaxpr.eqns:
-        n += 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.params.values():
-            for item in (v if isinstance(v, (tuple, list)) else (v,)):
-                if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
-                    n += _count_eqns(item)
-    return n
 
 
 def _unfused_flat(pool, q, nk, nv, pos, page, policy):

@@ -74,6 +74,7 @@ from repro.core.policy_core import (
     awrp_weights,
     init_adaptive_state,
 )
+from repro.obs import profiling
 
 __all__ = [
     "CacheState",
@@ -235,8 +236,11 @@ def init_set_state(
     )
 
 
+# sentinel-wrapped jit (obs.profiling): the sweep scan's trace count,
+# cache size and jaxpr eqn audit surface as compile/sweep_scan/... gauges
 @functools.partial(
-    jax.jit,
+    profiling.instrument,
+    "sweep_scan",
     static_argnames=(
         "policy_ids", "ways", "num_sets", "use_kernel", "unroll", "renorm_at",
         "mesh",

@@ -130,15 +130,20 @@ def sweep(
 
     out: Dict[str, Dict[int, float]] = {p: {} for p in policies}
     if dev_pols and len(trace):
+        from repro.obs.profiling import PHASES
+
         from .jax_policies import simulate_trace_batched
 
         tr = np.asarray(trace, dtype=np.int64)
         if block_size > 1:
             tr = tr // block_size
-        hits = simulate_trace_batched(
-            tr, dev_pols, caps, num_sets=num_sets, use_kernel=use_kernel
-        )
-        counts = np.asarray(hits[0].sum(-1))  # (P, C) exact int hit counts
+        # phase span includes the host pull of the hit grid — the span's
+        # number is the end-to-end device-sweep time (obs.spans docstring)
+        with PHASES.span("sweep"):
+            hits = simulate_trace_batched(
+                tr, dev_pols, caps, num_sets=num_sets, use_kernel=use_kernel
+            )
+            counts = np.asarray(hits[0].sum(-1))  # (P, C) exact int hit counts
         for pi, p in enumerate(dev_pols):
             for ci, c in enumerate(caps):
                 out[p][c] = int(counts[pi, ci]) / len(tr)

@@ -8,6 +8,13 @@ per-tenant quotas/telemetry and pressure-driven admission:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3_27b \
       --requests 8 --tenants "alice=4,bob=2" --repeat-prompts
+
+Performance observability (DESIGN.md §12) — live Prometheus endpoint,
+periodic JSONL snapshots, and jax.profiler trace capture:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3_27b \
+      --requests 8 --metrics-port 0 --metrics-out /tmp/serve_metrics \
+      --snapshot-every 2 --profile-dir /tmp/serve_prof --profile-phases
 """
 
 from __future__ import annotations
@@ -57,6 +64,27 @@ def main():
                     help="multi-tenant only: record the last N policy "
                     "decisions in the on-device trace ring and report "
                     "OPT-regret gauges in the final snapshot")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve live telemetry over HTTP from a background "
+                    "thread while generating: /metrics (Prometheus text), "
+                    "/metrics.json, /healthz (obs.server; 0 = ephemeral "
+                    "port, printed at startup)")
+    ap.add_argument("--snapshot-every", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="with --metrics-out: append a JSONL telemetry "
+                    "snapshot every SECONDS from a background thread while "
+                    "generating (plus the final snapshot)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture annotated jax.profiler device traces "
+                    "under DIR (one capture per --profile-every requests; "
+                    "open with TensorBoard's profile plugin)")
+    ap.add_argument("--profile-every", type=int, default=16, metavar="N",
+                    help="requests between jax.profiler captures "
+                    "(with --profile-dir)")
+    ap.add_argument("--profile-phases", action="store_true",
+                    help="sync-disciplined phase timers: each span blocks "
+                    "on its own outputs so span/* isolates per-phase "
+                    "device time (obs.spans sync discipline)")
     args = ap.parse_args()
 
     tenants = None
@@ -71,11 +99,34 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if args.decision_trace and tenants is None:
         ap.error("--decision-trace needs --tenants")
+    if args.snapshot_every and not args.metrics_out:
+        ap.error("--snapshot-every needs --metrics-out")
     engine = ServeEngine(cfg, params, max_len=args.max_len,
                          kv_mode=args.kv_mode, tenants=tenants,
                          auto_rebalance=args.auto_rebalance,
                          jit_loop=not args.host_loop,
-                         decision_trace=args.decision_trace)
+                         decision_trace=args.decision_trace,
+                         profile_dir=args.profile_dir,
+                         profile_every=args.profile_every,
+                         profile_phases=args.profile_phases)
+
+    # live export (obs.server): both run on daemon threads and read the
+    # registry through the same one-pull snapshot protocol telemetry() uses
+    server = logger = None
+    if args.metrics_port is not None:
+        from repro.obs.server import MetricsServer
+
+        server = MetricsServer(engine.telemetry,
+                               port=args.metrics_port).start()
+        print(f"metrics: serving http://127.0.0.1:{server.port}/metrics")
+    if args.snapshot_every:
+        from repro.obs.server import SnapshotLogger
+
+        logger = SnapshotLogger(
+            engine.telemetry, args.metrics_out + ".jsonl",
+            interval_s=args.snapshot_every,
+            extra={"arch": cfg.name, "kv_mode": args.kv_mode},
+        ).start()
 
     rng = np.random.RandomState(0)
     names = list(tenants) if tenants else ["default"]
@@ -112,6 +163,11 @@ def main():
               f"observed={agg['observed']:.2f} opt={agg['opt']:.2f} "
               f"regret={agg['regret']:.2f}")
     tel = engine.telemetry()  # ONE flat snapshot, one device pull
+    traced = " ".join(
+        f"{k.split('/')[1]}={tel[k]}" for k in sorted(tel)
+        if k.startswith("compile/") and k.endswith("/count") and tel[k]
+    )
+    print(f"compile traces: {traced}")
     if tenants is None:
         print(f"prefix cache: hits={tel['prefix/hits']} "
               f"misses={tel['prefix/misses']} "
@@ -130,10 +186,15 @@ def main():
 
         with open(args.metrics_out + ".prom", "w") as fh:
             fh.write(prometheus_text(tel))
-        append_jsonl(args.metrics_out + ".jsonl", tel,
-                     extra={"arch": cfg.name, "kv_mode": args.kv_mode})
+        if logger is not None:
+            logger.stop()  # appends the final JSONL snapshot itself
+        else:
+            append_jsonl(args.metrics_out + ".jsonl", tel,
+                         extra={"arch": cfg.name, "kv_mode": args.kv_mode})
         print(f"metrics: wrote {args.metrics_out}.prom, appended "
               f"{args.metrics_out}.jsonl")
+    if server is not None:
+        server.stop()
     for rid in sorted(results)[:4]:
         r = results[rid]
         print(f"  req {rid}: cached={r.prefill_cached} status={r.status} "

@@ -16,9 +16,14 @@ Three pillars over the serving stack:
   drained decision traces, reporting per-policy / per-tenant hit-ratio
   regret as registry gauges.
 
-Plus ``obs.spans`` (host-side wall-clock timing spans, themselves
-registry-mounted) and ``obs.export`` (Prometheus text exposition + JSONL
-event log, wired into ``launch/serve.py --metrics-out``).
+Plus ``obs.spans`` (host-side wall-clock timing spans with p50/p95 and
+the sync-discipline ``ready`` hook, themselves registry-mounted),
+``obs.export`` (Prometheus text exposition + JSONL event log, wired into
+``launch/serve.py --metrics-out``), ``obs.profiling`` (compile/retrace
+sentinels around every jitted entry point, jaxpr equation audits, and
+the opt-in ``jax.profiler`` trace capture — DESIGN.md §12), and
+``obs.server`` (background-thread HTTP ``/metrics`` endpoint + periodic
+JSONL snapshot loop for ``launch/serve.py --metrics-port``).
 
 Only ``metrics`` is imported at package level: ``repro.core`` /
 ``repro.cache`` modules import ``safe_ratio`` from here, and keeping the

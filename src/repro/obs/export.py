@@ -8,7 +8,12 @@ Both take the flat namespaced snapshot dict ``Registry.snapshot()`` (and
   ``<prefix>_<sanitized_path> <value>`` line per numeric scalar, array
   metrics (histograms, per-row planes) as indexed series with a
   ``{bucket="i"}`` label, string values as ``# info`` comments (policy
-  names and the like have no numeric sample).
+  names and the like have no numeric sample).  Every numeric metric gets
+  ``# HELP`` (carrying the ORIGINAL registry path, so the pre-sanitize
+  name survives into the scrape) and ``# TYPE ... gauge`` lines; two
+  registry paths that collide after sanitization (``a-b`` vs ``a_b``)
+  stay distinct series via a ``_dup<N>`` suffix instead of silently
+  emitting duplicates.
 * ``append_jsonl`` — one JSON object per call appended to a log file,
   numpy values converted and a host ``ts`` timestamp added — the event
   log a scrape-less deployment tails.
@@ -44,22 +49,36 @@ def _fmt(v) -> str:
 
 def prometheus_text(snapshot: Dict[str, Any], *, prefix: str = "awrp") -> str:
     """Render ``snapshot`` in the Prometheus text exposition format
-    (untyped samples; path separators become underscores).  Numeric
-    scalars are one sample each, 1-D arrays one sample per element with a
-    ``bucket`` label, strings ``# info`` comments.  Deterministic output
-    order (sorted by path)."""
+    (path separators become underscores).  Numeric scalars are one sample
+    each, 1-D arrays one sample per element with a ``bucket`` label,
+    strings ``# info`` comments; each numeric metric is preceded by
+    ``# HELP`` (original registry path) and ``# TYPE ... gauge`` lines.
+    Sanitization collisions get a ``_dup<N>`` suffix — the HELP line
+    carries the original path, so nothing is silently merged.
+    Deterministic output order (sorted by path)."""
     lines: List[str] = []
+    taken: Dict[str, int] = {}
     for path in sorted(snapshot):
         v = snapshot[path]
         name = _metric_name(path, prefix)
+        n_prior = taken.get(name, 0)
+        taken[name] = n_prior + 1
+        if n_prior:
+            name = f"{name}_dup{n_prior}"
         if isinstance(v, str):
             lines.append(f"# {name} info: {v}")
         elif isinstance(v, np.ndarray):
+            lines.append(f"# HELP {name} {path}")
+            lines.append(f"# TYPE {name} gauge")
             for i, x in enumerate(v.reshape(-1).tolist()):
                 lines.append(f'{name}{{bucket="{i}"}} {_fmt(x)}')
         elif isinstance(v, (bool, np.bool_)):
+            lines.append(f"# HELP {name} {path}")
+            lines.append(f"# TYPE {name} gauge")
             lines.append(f"{name} {int(v)}")
         elif isinstance(v, (int, float, np.integer, np.floating)):
+            lines.append(f"# HELP {name} {path}")
+            lines.append(f"# TYPE {name} gauge")
             lines.append(f"{name} {_fmt(v)}")
         else:  # non-metric payloads (lists, None) are skipped, visibly
             lines.append(f"# {name} skipped: {type(v).__name__}")

@@ -1,0 +1,278 @@
+"""Compile/retrace sentinels + profiler capture hooks (DESIGN.md §12).
+
+The performance half of observability: the serving stack must be able to
+see its own COMPILE behavior.  A silent retrace regression (the pre-PR-8
+temperature bug: every new sampling temperature recompiled the whole
+decode loop) shows up in wall-clock time but not in any counter — unless
+tracing itself is counted.  This module wraps jitted entry points in a
+*sentinel* layer that counts traces, measures trace wall time, reads the
+jit compilation-cache size, and audits the traced program's jaxpr
+equation count (the PR 8 bench's dispatch-count idea promoted to a
+first-class always-on metric), all mounted on the PR 9 metrics registry
+as ``compile/<fn>/{count,calls,cache_size,last_trace_s,eqns}`` gauges.
+
+How counting works: ``Sentinel.wrap(fun, **jit_kwargs)`` interposes a
+host-side counter that increments whenever the *python body* of ``fun``
+executes — which under ``jax.jit`` happens exactly at trace time — and
+returns a callable that behaves like ``jax.jit(fun, **jit_kwargs)``.
+The wrapper costs one python-level indirection per call (measured in the
+``obs_bench`` ≤5% overhead gate) and NOTHING inside compiled code.
+
+The jaxpr equation audit is LAZY: a detected trace stores only the
+abstract shapes of the call's arguments (``jax.ShapeDtypeStruct`` — no
+buffers are retained, donation-safe), and the next ``compile_metrics()``
+read re-traces the function abstractly to count equations.  Audits
+therefore cost one abstract trace per (entry point × new input shape),
+paid at the snapshot boundary, never on the hot path.
+
+Sentinels register themselves in a process-global weak set, aggregated
+by name: the serving engine, the tenancy manager, the sweep scan and the
+fused-kernel wrappers all mount through the one ``compile_metrics``
+provider, and two engines wrapping the same entry point sum into one
+series (the Prometheus convention for process-global counters).
+
+``TraceCapture`` is the opt-in ``jax.profiler`` hook:
+``ServeEngine(profile_dir=...)`` captures one annotated device trace per
+N requests into a directory TensorBoard/perfetto can open.
+
+``PHASES`` is the module-global ``SpanSet`` for phase timers that have
+no engine to live on (the sweep path); engine-scoped phases stay on
+``ServeEngine.spans``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import time
+import weakref
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.obs.spans import SpanSet
+
+__all__ = [
+    "Sentinel",
+    "instrument",
+    "compile_metrics",
+    "count_eqns",
+    "TraceCapture",
+    "PHASES",
+]
+
+#: module-global phase spans for code with no engine to mount on (the
+#: sweep path records its "sweep" phase here; ``launch/serve.py`` mounts
+#: this next to the engine's own spans)
+PHASES = SpanSet()
+
+#: every live sentinel, aggregated by name in ``compile_metrics``
+_ALL: "weakref.WeakSet[Sentinel]" = weakref.WeakSet()
+
+
+def count_eqns(jaxpr) -> int:
+    """Total equations in a (closed) jaxpr, recursing into nested jaxprs
+    in eqn params (scan/cond/jit bodies) but NOT into a ``pallas_call``'s
+    kernel — the kernel body runs inside ONE launch, so its equations are
+    not separate dispatches.  This is the bench's per-step dispatch-count
+    metric (DESIGN.md §10), shared with the always-on sentinel audits."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    n = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (tuple, list)) else (v,)):
+                if hasattr(item, "eqns") or hasattr(item, "jaxpr"):
+                    n += count_eqns(item)
+    return n
+
+
+def _abstract(x: Any) -> Any:
+    """Array leaves -> ``ShapeDtypeStruct`` (no buffer retained; the lazy
+    audit re-traces with these), everything else passes through (static
+    operands, python scalars, meshes)."""
+    if isinstance(x, (jax.Array, np.ndarray)):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return x
+
+
+class Sentinel:
+    """Compile/retrace counters for one named jitted entry point.
+
+    Mutable host object; one sentinel can wrap several jitted callables
+    (the decode loop wraps one program per ``steps`` bucket under the ONE
+    ``decode_loop`` sentinel — ``cache_size`` sums across them).  Metrics
+    surface (per name, after aggregation):
+
+    * ``count`` — traces ever taken (flat across repeated same-shape
+      batches; growth without new shapes IS a retrace regression);
+    * ``calls`` — wrapped calls ever made;
+    * ``cache_size`` — live jit-cache entries (compiled program count);
+    * ``last_trace_s`` — wall seconds of the most recent traced call
+      (trace + lowering + compile, as the caller experienced it);
+    * ``eqns`` — jaxpr equation count of the most recent trace (lazy
+      audit; ``-1`` when the abstract re-trace failed).
+    """
+
+    def __init__(self, name: str):
+        self.name = str(name)
+        self.calls = 0
+        self.traces = 0
+        self.last_trace_s = 0.0
+        self.eqns = 0
+        self._jits: list = []
+        self._pending: Optional[tuple] = None
+        _ALL.add(self)
+
+    @property
+    def cache_size(self) -> int:
+        """Total live jit-cache entries across every wrapped callable."""
+        return sum(j._cache_size() for j in self._jits)
+
+    def wrap(self, fun: Callable, *, audit_eqns: bool = True,
+             **jit_kwargs) -> Callable:
+        """``jax.jit(fun, **jit_kwargs)`` with this sentinel's counter
+        layer interposed.  The returned callable dispatches exactly like
+        the bare jit (donation, static args and sharding untouched) and
+        exposes ``_cache_size()`` and ``.sentinel`` for tests."""
+
+        @functools.wraps(fun)
+        def traced(*a, **k):
+            # executes only while jax traces `fun` — this IS the counter
+            self.traces += 1
+            return fun(*a, **k)
+
+        jfn = jax.jit(traced, **jit_kwargs)
+        self._jits.append(jfn)
+
+        @functools.wraps(fun)
+        def call(*a, **k):
+            before = self.traces
+            t0 = time.perf_counter()
+            out = jfn(*a, **k)
+            self.calls += 1
+            if self.traces != before:
+                self.last_trace_s = time.perf_counter() - t0
+                if audit_eqns:
+                    self._pending = (
+                        jfn,
+                        jax.tree.map(_abstract, a),
+                        jax.tree.map(_abstract, k),
+                    )
+            return out
+
+        call._cache_size = jfn._cache_size
+        call.sentinel = self
+        return call
+
+    def audit(self) -> None:
+        """Resolve a pending equation audit: re-trace the last traced
+        call's abstract shapes and store the jaxpr equation count.  Cost
+        is one abstract trace (no compile, no execution); no-op when
+        nothing traced since the last audit."""
+        if self._pending is None:
+            return
+        jfn, a, k = self._pending
+        self._pending = None
+        try:
+            self.eqns = count_eqns(jfn.trace(*a, **k).jaxpr)
+        except Exception:  # noqa: BLE001 — audit must never break serving
+            self.eqns = -1
+
+    def metrics(self) -> Dict[str, Any]:
+        """This sentinel's gauge dict (resolves any pending audit)."""
+        self.audit()
+        return {
+            "count": self.traces,
+            "calls": self.calls,
+            "cache_size": self.cache_size,
+            "last_trace_s": self.last_trace_s,
+            "eqns": self.eqns,
+        }
+
+
+def instrument(name: str, fun: Optional[Callable] = None, *,
+               audit_eqns: bool = True, **jit_kwargs):
+    """Wrap ``fun`` in a fresh named sentinel: ``instrument("decode",
+    fn, donate_argnums=(1,))`` replaces ``jax.jit(fn, ...)`` and mounts
+    the compile counters under ``compile/decode/...``.  Usable as a
+    decorator via ``functools.partial(instrument, "name", **jit_kwargs)``
+    in place of ``functools.partial(jax.jit, **jit_kwargs)``."""
+    if fun is None:
+        return functools.partial(instrument, name, audit_eqns=audit_eqns,
+                                 **jit_kwargs)
+    return Sentinel(name).wrap(fun, audit_eqns=audit_eqns, **jit_kwargs)
+
+
+def compile_metrics() -> Dict[str, Dict[str, Any]]:
+    """Registry provider aggregating every live sentinel by name:
+    ``{name: {count, calls, cache_size, last_trace_s, eqns}}`` — mounted
+    as the ``compile`` namespace, so snapshots carry
+    ``compile/<fn>/count`` etc.  Counts SUM across same-named sentinels
+    (several engines wrapping the same entry point are one series);
+    ``last_trace_s`` takes the max, ``eqns`` the latest non-zero audit.
+    Host values only — nothing to pull."""
+    agg: Dict[str, Dict[str, Any]] = {}
+    for s in sorted(_ALL, key=lambda s: s.name):
+        m = s.metrics()
+        d = agg.setdefault(s.name, {"count": 0, "calls": 0, "cache_size": 0,
+                                    "last_trace_s": 0.0, "eqns": 0})
+        d["count"] += m["count"]
+        d["calls"] += m["calls"]
+        d["cache_size"] += m["cache_size"]
+        d["last_trace_s"] = max(d["last_trace_s"], m["last_trace_s"])
+        if m["eqns"]:
+            d["eqns"] = m["eqns"]
+    return agg
+
+
+class TraceCapture:
+    """Opt-in ``jax.profiler`` capture: one annotated device trace per
+    ``every`` requests, written under ``profile_dir`` (open the directory
+    with TensorBoard's profile plugin or perfetto).
+
+    ``maybe(n)`` is the per-``generate`` hook: a context manager that
+    either runs the body inside ``jax.profiler.trace`` +
+    ``StepTraceAnnotation`` (when the request counter crosses a capture
+    boundary) or is a no-op.  Capture failures (an already-active
+    profiler session, an unwritable directory) degrade to the no-op path
+    — profiling must never take serving down."""
+
+    def __init__(self, profile_dir: str, every: int = 16):
+        self.dir = str(profile_dir)
+        self.every = max(int(every), 1)
+        self.seen = 0
+        self.captures = 0
+
+    @contextlib.contextmanager
+    def maybe(self, n: int = 1):
+        """Capture-or-passthrough for one request batch of size ``n``
+        (the first batch always captures; later batches capture each time
+        another ``every`` requests have passed).  Yields True when this
+        batch is being captured."""
+        due = self.seen // self.every != (self.seen + n) // self.every \
+            or self.seen == 0
+        self.seen += n
+        if not due:
+            yield False
+            return
+        try:
+            jax.profiler.start_trace(self.dir)
+        except Exception:  # noqa: BLE001 — e.g. a session already active
+            yield False
+            return
+        try:
+            with jax.profiler.StepTraceAnnotation(
+                "generate", step_num=self.captures
+            ):
+                yield True
+        finally:
+            jax.profiler.stop_trace()
+            self.captures += 1
+
+    def metrics(self) -> Dict[str, Any]:
+        """Registry provider: capture cadence and totals (host values)."""
+        return {"dir": self.dir, "every": self.every,
+                "requests_seen": self.seen, "captures": self.captures}

@@ -51,7 +51,9 @@ from repro.cache import paged_kv
 from repro.cache.paged_kv import AdaptivePagedPool
 from repro.cache.prefix_cache import PrefixCache
 from repro.models import model as M
+from repro.obs import profiling
 from repro.obs.metrics import Derived, Registry, loop_planes, loop_update, safe_ratio
+from repro.obs.profiling import Sentinel, TraceCapture
 from repro.obs.spans import SpanSet
 from repro.serve.sampling import sample, sample_traced
 from repro.serve.tenancy import (
@@ -126,7 +128,8 @@ class ServeEngine:
                  admission: Optional[AdmissionController] = None,
                  auto_rebalance: bool = False, jit_loop: bool = True,
                  mesh=None, fused: bool = False, metrics: bool = True,
-                 decision_trace: int = 0):
+                 decision_trace: int = 0, profile_dir: Optional[str] = None,
+                 profile_every: int = 16, profile_phases: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -165,16 +168,26 @@ class ServeEngine:
         self.expert_cache = expert_cache
         self.key = jax.random.PRNGKey(seed)
         self.jit_loop = bool(jit_loop)
-        self._prefill = jax.jit(
+        # compile/retrace sentinels (obs.profiling, DESIGN.md §12) around
+        # every jitted entry point the engine builds: trace counts, cache
+        # sizes, trace wall time and jaxpr eqn audits surface under
+        # compile/<fn>/... in telemetry()
+        self._prefill = profiling.instrument(
+            "prefill",
             lambda p, b: M.prefill(p, cfg, b, max_len=max_len, kv_mode=kv_mode)
         )
-        self._decode = jax.jit(
+        self._decode = profiling.instrument(
+            "decode_step",
             lambda p, t, c: M.decode_step(p, cfg, t, c, kv_mode=kv_mode,
                                           fused=self.fused, mesh=mesh)
         )
         #: jitted whole-decode-loop programs, one per steps bucket
-        #: (temperature is a traced operand — no retrace per temperature)
+        #: (temperature is a traced operand — no retrace per temperature);
+        #: ONE shared sentinel across the buckets, so compile/decode_loop/
+        #: count is the engine-wide loop trace total and cache_size the
+        #: total compiled-bucket count
         self._loops: Dict[int, object] = {}
+        self._loop_sentinel = Sentinel("decode_loop")
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
                       "shed": 0, "deferred": 0, "kv_ghost_hits": 0,
                       "rebalances": 0}
@@ -191,8 +204,17 @@ class ServeEngine:
         self._planes = loop_planes() if self.metrics else None
         self._fold = jax.jit(functools.partial(loop_update, vocab=cfg.vocab))
         #: host timing spans around the serving sections (prefill / decode /
-        #: rebalance / trace_drain) — mounted on the registry like the caches
-        self.spans = SpanSet()
+        #: rebalance / trace_drain) — mounted on the registry like the
+        #: caches.  ``profile_phases=True`` turns on the sync discipline:
+        #: each phase blocks on its own outputs at close so the timing
+        #: isolates that phase's device time (obs.spans module docstring)
+        self.spans = SpanSet(sync=bool(profile_phases))
+        #: opt-in jax.profiler capture: one annotated device trace per
+        #: ``profile_every`` requests under ``profile_dir`` (DESIGN.md §12)
+        self._capture = (
+            TraceCapture(profile_dir, profile_every)
+            if profile_dir else None
+        )
         #: the unified metrics registry: every telemetry surface the engine
         #: holds mounts a provider; ``telemetry()`` is ONE flat snapshot
         #: with a single batched device pull (zero per-step syncs)
@@ -222,8 +244,9 @@ class ServeEngine:
             batch["frames"] = jnp.zeros(
                 (B, S // self.cfg.enc_seq_divisor, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
-        with self.spans.span("prefill"):
+        with self.spans.span("prefill") as sp:
             logits, caches = self._prefill(self.params, batch)
+            sp.ready(logits)  # sync mode: time prefill's own device work
         self.stats["prefills"] += 1
         return logits, caches
 
@@ -254,7 +277,6 @@ class ServeEngine:
             # included) by the same jitted `loop_update` the host loop
             # applies per step, so the planes are bit-identical across the
             # loop modes (integer adds / scatter-adds only)
-            @functools.partial(jax.jit, donate_argnums=(2, 3, 5))
             def loop(params, logits, caches, key, temperature, planes):
                 toks = sample(logits[:, -1:], key, temperature=0.0,
                               vocab=cfg.vocab)
@@ -277,9 +299,8 @@ class ServeEngine:
                 )
                 return gen, caches, key, planes
 
-            return loop
+            return self._loop_sentinel.wrap(loop, donate_argnums=(2, 3, 5))
 
-        @functools.partial(jax.jit, donate_argnums=(2, 3))
         def loop(params, logits, caches, key, temperature):
             toks = sample(logits[:, -1:], key, temperature=0.0,
                           vocab=cfg.vocab)
@@ -300,7 +321,7 @@ class ServeEngine:
                                   axis=1)
             return gen, caches, key
 
-        return loop
+        return self._loop_sentinel.wrap(loop, donate_argnums=(2, 3))
 
     # -- ghost-hit feed (true-adaptive paged KV, DESIGN.md §8) --------------
     @property
@@ -366,6 +387,11 @@ class ServeEngine:
             ),
         )
         self.registry.mount("span", self.spans.metrics)
+        # process-global compile/retrace sentinels (every engine mounts the
+        # same aggregation — one series per entry-point name)
+        self.registry.mount("compile", profiling.compile_metrics)
+        if self._capture is not None:
+            self.registry.mount("profiler", self._capture.metrics)
 
     def _serve_provider(self) -> dict:
         out: dict = dict(self.stats)
@@ -483,7 +509,15 @@ class ServeEngine:
         only if their tenant is still at shed pressure by then, otherwise
         completed with ``status="deferred"`` and the exact telemetry an
         accepted run would have produced).  Mutates engine state (PRNG
-        chain, stats, caches) — see the class docstring."""
+        chain, stats, caches) — see the class docstring.  With
+        ``profile_dir`` set, one batch per ``profile_every`` requests runs
+        inside an annotated ``jax.profiler`` capture."""
+        if self._capture is None:
+            return self._generate(requests)
+        with self._capture.maybe(len(requests)):
+            return self._generate(requests)
+
+    def _generate(self, requests: List[Request]) -> Dict[int, Result]:
         out: Dict[int, Result] = {}
         for r in requests:
             r.prompt = self._align(r.prompt)
@@ -630,7 +664,11 @@ class ServeEngine:
         caches = self._shard_caches(caches, len(reqs))
         if self.jit_loop:
             loop = self._get_loop(max_new)
-            with self.spans.span("decode"):
+            # the span contains the host pull serving itself performs
+            # (np.asarray of the tokens) — async dispatch means a span
+            # around the bare call would time only enqueue; sync mode
+            # additionally blocks on the caches (obs.spans docstring)
+            with self.spans.span("decode") as sp:
                 if self.metrics:
                     gen_dev, caches, self.key, self._planes = loop(
                         self.params, logits, caches, self.key,
@@ -639,8 +677,9 @@ class ServeEngine:
                     gen_dev, caches, self.key = loop(
                         self.params, logits, caches, self.key,
                         jnp.float32(reqs[0].temperature))
+                sp.ready(caches)
+                gen = np.asarray(gen_dev)
             self.stats["decode_steps"] += max_new - 1
-            gen = np.asarray(gen_dev)
         else:
             with self.spans.span("decode"):
                 toks = sample(logits[:, -1:], self.key, temperature=0.0,
@@ -658,7 +697,8 @@ class ServeEngine:
                         self._planes = self._fold(self._planes, toks)
                     generated.append(toks)
                     self.stats["decode_steps"] += 1
-            gen = np.concatenate([np.asarray(t) for t in generated], axis=1)
+                gen = np.concatenate(
+                    [np.asarray(t) for t in generated], axis=1)
         if single and self._ghost_feed_on:
             self._kv_persist(caches, reqs[0].tenant_id)
         dt = time.time() - t0

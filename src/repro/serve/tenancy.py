@@ -61,6 +61,7 @@ from repro.core.policy_core import (
     admission_decide,
 )
 from repro.obs import decision_trace as _dt
+from repro.obs import profiling
 from repro.obs.metrics import safe_ratio
 
 __all__ = [
@@ -133,10 +134,17 @@ class TenantCacheManager:
         # drained via ``drain_trace``.  Replicated (never sharded) — it is
         # byte-sized and the push order is the scan order either way.
         self.ring = _dt.ring_init(ring_capacity) if ring_capacity else None
+        # per-manager compile sentinels (obs.profiling): created ONCE so
+        # trace counts stay monotone across rebalances (a rebalance rebuilds
+        # the jitted programs under the same sentinel — the recompile shows
+        # up as compile/<fn>/count growth, which is exactly the point)
+        self._step_sentinel = profiling.Sentinel("tenancy_step")
+        self._stream_sentinel = profiling.Sentinel("access_stream")
         self.core = self._build_core()
         self.state = self.core.init(mesh=mesh)
         self.counters: RowCounters = self.core.init_counters(mesh=mesh)
         self._step = self._jit_step()
+        self._stream = self._jit_stream()
 
     # -- core mount ---------------------------------------------------------
     @property
@@ -178,16 +186,63 @@ class TenantCacheManager:
         pressure plane alongside the hit/miss/eviction counters."""
         core, alpha = self.core, self.pressure_alpha
         if self.ring is not None:
-            return jax.jit(
+            return self._step_sentinel.wrap(
                 lambda st, ctr, ids, act, ring: core.on_access_counted(
                     st, ctr, ids, active=act, pressure_alpha=alpha, ring=ring
                 )
             )
-        return jax.jit(
+        return self._step_sentinel.wrap(
             lambda st, ctr, ids, act: core.on_access_counted(
                 st, ctr, ids, active=act, pressure_alpha=alpha
             )
         )
+
+    def _jit_stream(self):
+        """The whole-stream replay as ONE jitted program (the
+        ``access_stream`` entry point): a scan of masked
+        ``on_access_counted`` steps carrying state, counters (and the
+        decision-trace ring).  Compiled once per core spec × stream
+        length; sentinel-wrapped (``compile/access_stream/...``), so a
+        retrace storm from wildly varying stream lengths is visible as
+        count growth instead of silent recompiles."""
+        core, R = self.core, self.core.rows
+        alpha = self.pressure_alpha
+        if self.ring is not None:
+            def stream(state, ctr, ring, rows, keys):
+                def body(carry, xs):
+                    st, c, rg = carry
+                    row, key = xs
+                    active = jnp.arange(R) == row
+                    st, c, hit, rg = core.on_access_counted(
+                        st, c, jnp.full((R,), key, dtype=jnp.int32),
+                        active=active, pressure_alpha=alpha, ring=rg,
+                    )
+                    return (st, c, rg), hit[row]
+
+                (state, ctr, ring), hits = jax.lax.scan(
+                    body, (state, ctr, ring), (rows, keys)
+                )
+                return state, ctr, ring, hits
+
+            return self._stream_sentinel.wrap(stream)
+
+        def stream(state, ctr, rows, keys):
+            def body(carry, xs):
+                st, c = carry
+                row, key = xs
+                active = jnp.arange(R) == row
+                st, c, hit = core.on_access_counted(
+                    st, c, jnp.full((R,), key, dtype=jnp.int32),
+                    active=active, pressure_alpha=alpha,
+                )
+                return (st, c), hit[row]
+
+            (state, ctr), hits = jax.lax.scan(
+                body, (state, ctr), (rows, keys)
+            )
+            return state, ctr, hits
+
+        return self._stream_sentinel.wrap(stream)
 
     def _pull_pressure(self) -> None:
         """Refresh the host mirror from the device plane (writable copy)."""
@@ -247,12 +302,14 @@ class TenantCacheManager:
     ) -> np.ndarray:
         """Replay a whole interleaved stream device-side: one jitted scan of
         masked ``on_access_counted`` steps (access i activates only row
-        ``tenant_rows[i]``).  Returns the per-access hit bits.  State and
-        counters advance exactly as ``access`` would, including the
-        pressure EWMA — it folds per access INSIDE the scan, so batch
-        order matters exactly as on the host path (evicted-key reporting
-        still needs the host path).  Mutates ``state``/``counters`` and the
-        host mirrors; one device sync at the end, none per access."""
+        ``tenant_rows[i]``; the ring, when on, rides the scan carry next
+        to the counters — zero per-access syncs).  Returns the per-access
+        hit bits.  State and counters advance exactly as ``access`` would,
+        including the pressure EWMA — it folds per access INSIDE the scan,
+        so batch order matters exactly as on the host path (evicted-key
+        reporting still needs the host path).  Mutates
+        ``state``/``counters`` and the host mirrors; one device sync at
+        the end, none per access."""
         tenant_rows = np.asarray(tenant_rows, dtype=np.int32)
         keys = np.asarray(keys, dtype=np.int32)
         if tenant_rows.shape != keys.shape or tenant_rows.ndim != 1:
@@ -260,40 +317,16 @@ class TenantCacheManager:
                 f"tenant_rows {tenant_rows.shape} and keys {keys.shape} must "
                 "be equal-length 1-D arrays"
             )
-        core, R = self.core, self.core.rows
-        alpha = self.pressure_alpha
         ctr_before = jax.tree.map(np.asarray, self.counters)
 
         xs_dev = (jnp.asarray(tenant_rows), jnp.asarray(keys))
         if self.ring is not None:
-            # ring rides the scan carry next to the counters — recording
-            # stays inside the one jitted program, zero per-access syncs
-            def body(carry, xs):
-                state, ctr, ring = carry
-                row, key = xs
-                active = jnp.arange(R) == row
-                state, ctr, hit, ring = core.on_access_counted(
-                    state, ctr, jnp.full((R,), key, dtype=jnp.int32),
-                    active=active, pressure_alpha=alpha, ring=ring,
-                )
-                return (state, ctr, ring), hit[row]
-
-            (self.state, self.counters, self.ring), hits = jax.lax.scan(
-                body, (self.state, self.counters, self.ring), xs_dev
+            self.state, self.counters, self.ring, hits = self._stream(
+                self.state, self.counters, self.ring, *xs_dev
             )
         else:
-            def body(carry, xs):
-                state, ctr = carry
-                row, key = xs
-                active = jnp.arange(R) == row
-                state, ctr, hit = core.on_access_counted(
-                    state, ctr, jnp.full((R,), key, dtype=jnp.int32),
-                    active=active, pressure_alpha=alpha,
-                )
-                return (state, ctr), hit[row]
-
-            (self.state, self.counters), hits = jax.lax.scan(
-                body, (self.state, self.counters), xs_dev
+            self.state, self.counters, hits = self._stream(
+                self.state, self.counters, *xs_dev
             )
         self._pull_pressure()
         # tenant-altitude AWRP metadata: F from the counter deltas, R from
@@ -416,6 +449,7 @@ class TenantCacheManager:
         old_ways = self.core.ways
         self.core = self._build_core()
         self._step = self._jit_step()
+        self._stream = self._jit_stream()
         for t in self.tenants:
             r = self.row(t)
             new_w = self.quotas[t]
@@ -601,7 +635,9 @@ def _decide_batch_fn(defer_at, shed_at, warmup, alpha, rows, with_ring=False):
     shed's probation decay is visible to every later request in the batch —
     the same ordering contract as the host per-request loop.  With
     ``with_ring`` the decision-trace ring rides the carry too and each
-    request appends one KIND_ADMIT event; the decision math is untouched."""
+    request appends one KIND_ADMIT event; the decision math is untouched.
+    Sentinel-wrapped (one ``decide_batch`` sentinel per cached config,
+    aggregated by name in ``compile/decide_batch/...``)."""
 
     def decide_one(p, accesses, r):
         code = admission_decide(
@@ -616,7 +652,7 @@ def _decide_batch_fn(defer_at, shed_at, warmup, alpha, rows, with_ring=False):
 
     if with_ring:
 
-        @jax.jit
+        @functools.partial(profiling.instrument, "decide_batch")
         def fn(pressure, accesses, req_rows, ring):
             def body(carry, r):
                 p, rg = carry
@@ -635,7 +671,7 @@ def _decide_batch_fn(defer_at, shed_at, warmup, alpha, rows, with_ring=False):
 
         return fn
 
-    @jax.jit
+    @functools.partial(profiling.instrument, "decide_batch")
     def fn(pressure, accesses, req_rows):
         def body(p, r):
             return decide_one(p, accesses, r)

@@ -178,6 +178,40 @@ def test_ring_push_drain_roundtrip_and_wraparound():
     assert np.all(rec["admit"] == -1)  # defaulted field
 
 
+def test_ring_drain_after_multiple_full_wraparounds():
+    """Three-plus full laps through the ring with VARYING push batch
+    sizes (1, 3, 2, 5, ...): the cursor arithmetic must keep the drained
+    window exactly the last ``capacity`` surviving events, oldest first,
+    regardless of how pushes straddle the wrap boundary."""
+    cap = 8
+    ring = dt.ring_init(cap)
+    rng = np.random.RandomState(42)
+    pushed_keys, pushed_hits = [], []
+    serial = 0
+    while serial < cap * 4 + 3:  # > 4 full laps, ends mid-lap
+        n = int(rng.randint(1, 6))  # batch sizes 1..5 straddle the wrap
+        keys = np.arange(serial, serial + n, dtype=np.int32)
+        hits = (keys % 3 == 0).astype(np.int32)
+        ev = dt.pack_events(n, kind=dt.KIND_ACCESS,
+                            row=jnp.asarray(keys % 2),
+                            key=jnp.asarray(1000 + keys),
+                            hit=jnp.asarray(hits),
+                            weight=jnp.asarray(keys, jnp.float32) * 0.25)
+        ring = dt.ring_push(ring, ev, jnp.ones((n,), dtype=bool))
+        pushed_keys.extend((1000 + keys).tolist())
+        pushed_hits.extend(hits.tolist())
+        serial += n
+    rec = dt.drain(ring)
+    assert len(rec) == cap and int(ring.count) == serial
+    assert rec["key"].tolist() == pushed_keys[-cap:]  # chronological tail
+    assert rec["hit"].tolist() == pushed_hits[-cap:]
+    expected_w = [(k - 1000) * 0.25 for k in pushed_keys[-cap:]]
+    assert rec["weight"].tolist() == expected_w  # bitcast exact after 4 laps
+    # draining is non-destructive: a second drain reads the same window
+    rec2 = dt.drain(ring)
+    assert rec2["key"].tolist() == rec["key"].tolist()
+
+
 def test_ring_push_masked_scatter_skips_masked_out_rows():
     ring = dt.ring_init(8)
     ev = dt.pack_events(4, kind=dt.KIND_ACCESS,
@@ -356,6 +390,85 @@ def test_prometheus_text_rendering():
     assert "awrp_serve_flag 1\n" in text
     assert "# awrp_serve_junk skipped: list" in text
     assert text == prometheus_text(snap)  # deterministic (sorted by path)
+
+
+def test_prometheus_help_type_and_collision_dedupe():
+    snap = {
+        "serve/requests": 4,
+        "serve-requests": 7,  # sanitizes to the SAME metric name
+        "tenant/a/hit_ratio": 0.5,
+        "prefix/policy": "awrp",
+    }
+    text = prometheus_text(snap)
+    # every numeric metric carries HELP (original path) + TYPE gauge
+    assert "# HELP awrp_serve_requests serve-requests\n" in text
+    assert "# TYPE awrp_serve_requests gauge\n" in text
+    assert "# HELP awrp_tenant_a_hit_ratio tenant/a/hit_ratio\n" in text
+    # the post-sanitize collision stays a distinct series, not a silent
+    # duplicate sample ("serve-requests" sorts first and keeps the name)
+    assert "awrp_serve_requests 7\n" in text
+    assert "# HELP awrp_serve_requests_dup1 serve/requests\n" in text
+    assert "awrp_serve_requests_dup1 4\n" in text
+    # info comments carry no HELP/TYPE (they have no numeric sample)
+    assert "# HELP awrp_prefix_policy" not in text
+    sample_names = [ln.split()[0] for ln in text.splitlines()
+                    if ln and not ln.startswith("#")]
+    assert len(sample_names) == len(set(sample_names))  # no dup samples
+
+
+def _roundtrip_snapshot():
+    """Awkward-but-legal values: denormals, huge ints, negative zero,
+    non-round floats, multi-bucket arrays."""
+    rng = np.random.RandomState(9)
+    return {
+        "a/exact_ratio": 3 / 7,
+        "a/tiny": 5e-324,
+        "a/neg": -0.0,
+        "a/big_int": 2**53 - 1,
+        "a/bool": True,
+        "a/hist": rng.randint(0, 1000, size=5),
+        "a/plane": rng.rand(4).astype(np.float64),
+        "a/np_scalar": np.float32(0.1),
+    }
+
+
+def test_prometheus_roundtrip_values_bit_equal():
+    """Property: parsing the exposition text back recovers every numeric
+    sample bit-for-bit — ``_fmt`` uses ``repr``, which round-trips."""
+    snap = _roundtrip_snapshot()
+    parsed = {}
+    for ln in prometheus_text(snap).splitlines():
+        if ln.startswith("#") or not ln:
+            continue
+        name, val = ln.rsplit(" ", 1)
+        parsed[name] = float(val)
+    assert parsed["awrp_a_exact_ratio"] == 3 / 7  # bit-equal, not approx
+    assert parsed["awrp_a_tiny"] == 5e-324
+    assert parsed["awrp_a_neg"] == 0.0
+    assert parsed["awrp_a_big_int"] == 2**53 - 1
+    assert parsed["awrp_a_bool"] == 1
+    assert parsed["awrp_a_np_scalar"] == float(np.float32(0.1))
+    for i, x in enumerate(snap["a/hist"].tolist()):
+        assert parsed[f'awrp_a_hist{{bucket="{i}"}}'] == x
+    for i, x in enumerate(snap["a/plane"].tolist()):
+        assert parsed[f'awrp_a_plane{{bucket="{i}"}}'] == x  # float64 exact
+
+
+def test_jsonl_roundtrip_values_equal(tmp_path):
+    """Same property through the JSONL path: ``json.loads`` of the
+    appended line recovers every value exactly (json floats are repr'd
+    shortest-round-trip doubles)."""
+    snap = _roundtrip_snapshot()
+    path = tmp_path / "rt.jsonl"
+    append_jsonl(str(path), snap)
+    rec = json.loads(path.read_text())
+    assert rec["a/exact_ratio"] == 3 / 7
+    assert rec["a/tiny"] == 5e-324
+    assert rec["a/big_int"] == 2**53 - 1
+    assert rec["a/bool"] is True
+    assert rec["a/hist"] == snap["a/hist"].tolist()
+    assert rec["a/plane"] == snap["a/plane"].tolist()
+    assert rec["a/np_scalar"] == float(np.float32(0.1))
 
 
 def test_append_jsonl_roundtrip(tmp_path):

@@ -1,0 +1,417 @@
+"""Committed bench trajectory: per-section baselines + regression gate.
+
+``BENCH_sweep.json`` (the ``benchmarks/run.py --sweep-json`` artifact)
+dies with each CI run; this tool turns it into a perf record that lives
+in git.  ``--update`` splits a sweep artifact into per-section baseline
+files — ``benchmarks/baselines/BENCH_<section>.json`` — each carrying
+the section's record plus capture metadata (cpu_count, jax version,
+source command).  ``--check`` re-splits a FRESH sweep artifact and
+compares it against the committed baselines under per-metric tolerance
+gates, exiting non-zero on any regression: the CI bench-smoke job runs
+it after the benches, so a PR that slows the sweep grid, breaks
+bit-identity parity, or bloats the fused kernel's equation count fails
+visibly instead of silently re-baselining itself.
+
+Sections mirror how the benches merge into the sweep artifact:
+``sweep`` is ``policy_overhead``'s top-level base record; ``tenancy``,
+``sharded_sweep``, ``serve_loop``, ``obs_overhead`` and ``policy_attn``
+are the named sub-records.
+
+Tolerance policy (DESIGN.md §12): every gate is one of
+
+* ``equal`` — exact match, for deterministic claims: parity booleans,
+  hit ratios (bit-identical device decisions), jaxpr equation counts,
+  grid/config shapes.  These hold across machines, so they are ALWAYS
+  checked.
+* ``higher`` / ``lower`` — relative bands for throughput / latency
+  metrics: fresh >= baseline*(1-tol), resp. fresh <= baseline*(1+tol).
+  These are TIMING gates: wall-clock numbers only compare honestly on
+  comparable machines, so they are SKIPPED (with a visible note in the
+  report) when the fresh ``os.cpu_count()`` differs from the baseline's
+  recorded one — a 1-core container baseline says nothing about an
+  8-core CI runner's expected req/s.
+* ``absmax`` — an absolute ceiling (the obs overhead fraction <= 0.05);
+  machine-relative by construction (a ratio of two timings taken on the
+  same box), so always checked.
+
+A fresh value that's BETTER than its band is reported as improved —
+rerun ``--update`` to ratchet the baseline forward and commit the diff;
+the trajectory is the git history of ``benchmarks/baselines/``.
+
+Usage::
+
+  # seed/refresh baselines from a local bench run
+  PYTHONPATH=src python benchmarks/run.py --smoke --devices 8 \\
+      --sweep-json BENCH_sweep.json
+  python tools/bench_history.py --update --sweep BENCH_sweep.json
+
+  # CI regression gate (exit 1 on regression; diff JSON for the artifact)
+  python tools/bench_history.py --check --sweep BENCH_sweep.json \\
+      --diff-out bench-trend-diff.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import fnmatch
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+#: named sub-records the benches merge into the sweep artifact; every
+#: other top-level key belongs to the ``sweep`` base record
+SECTION_KEYS = (
+    "tenancy", "sharded_sweep", "serve_loop", "obs_overhead", "policy_attn",
+)
+
+DEFAULT_BASELINE_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "baselines",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One tolerance gate: ``path`` is a dotted key path into the
+    section's record (``fnmatch`` wildcards expand against the BASELINE,
+    so a baseline key a fresh run dropped still fails as missing);
+    ``kind`` is equal / higher / lower / absmax; ``tol`` the relative
+    band (higher/lower) or absolute ceiling (absmax); ``timing`` marks
+    wall-clock gates that only run on a cpu_count-matched machine."""
+
+    path: str
+    kind: str
+    tol: float = 0.0
+    timing: bool = False
+
+
+#: the committed tolerance policy, per section (module docstring)
+GATES: Dict[str, List[Gate]] = {
+    "sweep": [
+        Gate("policies", "equal"),
+        Gate("capacities", "equal"),
+        Gate("n_accesses", "equal"),
+        Gate("grid_configs", "equal"),
+        Gate("parity_with_host_oracles", "equal"),
+        Gate("speedup_vs_host", "higher", 0.30, timing=True),
+        Gate("grid_accesses_per_s", "higher", 0.30, timing=True),
+    ],
+    "tenancy": [
+        Gate("policy", "equal"),
+        Gate("n_accesses", "equal"),
+        Gate("quotas", "equal"),
+        Gate("rebalance_moves", "equal"),
+        Gate("weighted_hit_ratio.*", "equal"),
+        Gate("per_tenant_hit_ratio.*.*", "equal"),
+        Gate("us_per_access_quota_rows", "lower", 0.50, timing=True),
+    ],
+    "sharded_sweep": [
+        Gate("devices", "equal"),
+        Gate("bit_identical", "equal"),
+        Gate("n_accesses", "equal"),
+        Gate("policies", "equal"),
+        Gate("unsharded_s", "lower", 0.50, timing=True),
+        Gate("meshes.*.speedup_vs_unsharded", "higher", 0.40, timing=True),
+    ],
+    "serve_loop": [
+        Gate("n_requests", "equal"),
+        Gate("new_tokens", "equal"),
+        Gate("admission_bit_identical", "equal"),
+        Gate("requests_per_sec.jit_loop", "higher", 0.40, timing=True),
+        Gate("requests_per_sec.host_loop", "higher", 0.40, timing=True),
+        Gate("speedup_jit_vs_host", "higher", 0.30, timing=True),
+        Gate("admission_us_per_decision.device_batch", "lower", 0.50,
+             timing=True),
+    ],
+    "obs_overhead": [
+        Gate("gate_max_overhead", "equal"),
+        Gate("overhead_frac", "absmax", 0.05),
+        Gate("requests_per_sec.metrics_on", "higher", 0.40, timing=True),
+        Gate("snapshot_us", "lower", 1.00, timing=True),
+        Gate("trace_drain_us", "lower", 1.00, timing=True),
+    ],
+    "policy_attn": [
+        Gate("B", "equal"),
+        Gate("pages", "equal"),
+        Gate("steps", "equal"),
+        Gate("devices", "equal"),
+        Gate("policies.*.fused_eqns", "equal"),
+        Gate("policies.*.unfused_eqns", "equal"),
+        Gate("policies.*.dispatch_reduction", "equal"),
+        Gate("policies.*.bit_identical", "equal"),
+        Gate("policies.*.mesh_bit_identical", "equal"),
+        Gate("policies.*.fused_us_per_step_interpret", "lower", 0.60,
+             timing=True),
+    ],
+}
+
+
+def split_sections(sweep: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """Split a loaded sweep artifact into ``{section: record}``: the
+    named sub-records plus the remaining top-level keys as ``sweep``.
+    Sections the artifact doesn't carry are simply absent."""
+    out: Dict[str, Dict[str, Any]] = {}
+    base = {k: v for k, v in sweep.items() if k not in SECTION_KEYS}
+    if base:
+        out["sweep"] = base
+    for key in SECTION_KEYS:
+        if key in sweep:
+            out[key] = sweep[key]
+    return out
+
+
+def flatten(record: Any, prefix: str = "") -> Dict[str, Any]:
+    """Nested dicts -> one flat ``{dotted.path: leaf}`` dict (lists stay
+    leaves, compared whole)."""
+    if not isinstance(record, dict):
+        return {prefix: record}
+    out: Dict[str, Any] = {}
+    for k, v in record.items():
+        p = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten(v, p))
+        else:
+            out[p] = v
+    return out
+
+
+def _capture_meta(source: str) -> Dict[str, Any]:
+    """Metadata stamped into a baseline at --update time: what machine
+    and software produced these numbers (the cpu_count gates timing
+    checks; the rest is for the human reading the diff)."""
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:  # noqa: BLE001 — baselines can update without jax
+        jax_version = "unavailable"
+    return {
+        "updated_unix": int(time.time()),
+        "cpu_count": os.cpu_count(),
+        "platform": sys.platform,
+        "python": ".".join(map(str, sys.version_info[:3])),
+        "jax": jax_version,
+        "source": source,
+    }
+
+
+def update(sweep_path: str, baseline_dir: str) -> List[str]:
+    """Write one ``BENCH_<section>.json`` baseline per section found in
+    the sweep artifact at ``sweep_path``.  Returns the file paths
+    written.  Sections absent from the artifact keep their existing
+    baseline untouched (partial runs refresh only what they measured)."""
+    with open(sweep_path) as fh:
+        sweep = json.load(fh)
+    sections = split_sections(sweep)
+    if not sections:
+        raise SystemExit(f"{sweep_path} contains no recognizable sections")
+    os.makedirs(baseline_dir, exist_ok=True)
+    meta = _capture_meta(os.path.basename(sweep_path))
+    written = []
+    for name, record in sections.items():
+        path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+        with open(path, "w") as fh:
+            json.dump({"section": name, "meta": meta, "record": record},
+                      fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        written.append(path)
+    return written
+
+
+def load_baselines(baseline_dir: str) -> Dict[str, Dict[str, Any]]:
+    """Read every committed ``BENCH_<section>.json`` under
+    ``baseline_dir`` into ``{section: {meta, record}}``."""
+    out = {}
+    if not os.path.isdir(baseline_dir):
+        return out
+    for fn in sorted(os.listdir(baseline_dir)):
+        if fn.startswith("BENCH_") and fn.endswith(".json"):
+            with open(os.path.join(baseline_dir, fn)) as fh:
+                doc = json.load(fh)
+            out[doc["section"]] = doc
+    return out
+
+
+def _check_one(gate: Gate, path: str, base_v: Any, fresh: Dict[str, Any],
+               cpu_ok: bool) -> Dict[str, Any]:
+    """Evaluate one expanded gate path; returns the result row for the
+    report/diff (status: ok / improved / skipped / FAIL)."""
+    row: Dict[str, Any] = {
+        "path": path, "kind": gate.kind, "tol": gate.tol,
+        "baseline": base_v,
+    }
+    if gate.timing and not cpu_ok:
+        row.update(status="skipped",
+                   note="timing gate skipped: cpu_count differs from "
+                        "baseline machine")
+        return row
+    if path not in fresh:
+        row.update(status="FAIL", note="metric missing from fresh run")
+        return row
+    v = fresh[path]
+    row["fresh"] = v
+    if gate.kind == "equal":
+        ok = v == base_v
+        row.update(status="ok" if ok else "FAIL",
+                   note=None if ok else "exact-match metric changed")
+    elif gate.kind == "higher":
+        floor = base_v * (1.0 - gate.tol)
+        if v < floor:
+            row.update(status="FAIL",
+                       note=f"below tolerance floor {floor:.4g}")
+        elif v > base_v * (1.0 + gate.tol):
+            row.update(status="improved",
+                       note="above band: rerun --update to ratchet")
+        else:
+            row.update(status="ok")
+    elif gate.kind == "lower":
+        ceil = base_v * (1.0 + gate.tol)
+        if v > ceil:
+            row.update(status="FAIL",
+                       note=f"above tolerance ceiling {ceil:.4g}")
+        elif v < base_v * (1.0 - gate.tol):
+            row.update(status="improved",
+                       note="below band: rerun --update to ratchet")
+        else:
+            row.update(status="ok")
+    elif gate.kind == "absmax":
+        ok = v <= gate.tol
+        row.update(status="ok" if ok else "FAIL",
+                   note=None if ok else f"exceeds absolute limit {gate.tol}")
+    else:  # unknown kind in a committed gate table is a tool bug
+        row.update(status="FAIL", note=f"unknown gate kind {gate.kind!r}")
+    return row
+
+
+def check(sweep_path: str, baseline_dir: str) -> Dict[str, Any]:
+    """Compare the fresh sweep artifact against every committed baseline.
+    Returns the full diff document: per-section gate rows plus counts;
+    ``diff["failures"] > 0`` means a tolerance-exceeding regression (or a
+    section/metric the fresh run dropped)."""
+    with open(sweep_path) as fh:
+        fresh_sections = split_sections(json.load(fh))
+    baselines = load_baselines(baseline_dir)
+    if not baselines:
+        raise SystemExit(
+            f"no baselines under {baseline_dir} — seed them with --update")
+    cpu_now = os.cpu_count()
+    diff: Dict[str, Any] = {
+        "sweep": os.path.basename(sweep_path),
+        "cpu_count": cpu_now,
+        "sections": {},
+        "failures": 0, "improved": 0, "skipped": 0, "checked": 0,
+    }
+    for name, doc in baselines.items():
+        rows: List[Dict[str, Any]] = []
+        base_flat = flatten(doc["record"])
+        cpu_ok = doc["meta"].get("cpu_count") == cpu_now
+        if name not in fresh_sections:
+            rows.append({"path": "<section>", "kind": "presence",
+                         "status": "FAIL",
+                         "note": "section missing from fresh run "
+                                 "(bench not executed?)"})
+        else:
+            fresh_flat = flatten(fresh_sections[name])
+            for gate in GATES.get(name, []):
+                matched = [p for p in sorted(base_flat)
+                           if fnmatch.fnmatchcase(p, gate.path)]
+                for p in matched:
+                    rows.append(_check_one(gate, p, base_flat[p],
+                                           fresh_flat, cpu_ok))
+        for r in rows:
+            diff["checked"] += 1
+            st = r["status"]
+            if st == "FAIL":
+                diff["failures"] += 1
+            elif st == "improved":
+                diff["improved"] += 1
+            elif st == "skipped":
+                diff["skipped"] += 1
+        diff["sections"][name] = {
+            "baseline_meta": doc["meta"],
+            "cpu_matched": cpu_ok,
+            "gates": rows,
+        }
+    return diff
+
+
+def _print_report(diff: Dict[str, Any]) -> None:
+    """Human-readable gate report (one line per non-ok gate, summary per
+    section)."""
+    for name, sec in diff["sections"].items():
+        rows = sec["gates"]
+        n_fail = sum(r["status"] == "FAIL" for r in rows)
+        n_imp = sum(r["status"] == "improved" for r in rows)
+        n_skip = sum(r["status"] == "skipped" for r in rows)
+        tag = "FAIL" if n_fail else "ok"
+        cpu = "" if sec["cpu_matched"] else " [timing gates skipped: cpu]"
+        print(f"{name}: {tag} ({len(rows)} gates, {n_fail} fail, "
+              f"{n_imp} improved, {n_skip} skipped){cpu}")
+        for r in rows:
+            if r["status"] == "ok":
+                continue
+            fresh = r.get("fresh", "-")
+            print(f"  [{r['status']}] {r['path']}: baseline="
+                  f"{r.get('baseline', '-')} fresh={fresh} ({r['kind']}"
+                  f", tol={r.get('tol', 0)}) {r.get('note') or ''}")
+    print(f"total: {diff['checked']} gates, {diff['failures']} failures, "
+          f"{diff['improved']} improved, {diff['skipped']} skipped")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """CLI entry: --update / --check / --show (see module docstring)."""
+    ap = argparse.ArgumentParser(
+        description="committed bench baselines + regression gate")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--update", action="store_true",
+                      help="write BENCH_<section>.json baselines from the "
+                      "sweep artifact")
+    mode.add_argument("--check", action="store_true",
+                      help="gate a fresh sweep artifact against committed "
+                      "baselines; exit 1 on regression")
+    mode.add_argument("--show", action="store_true",
+                      help="list committed baselines and their metadata")
+    ap.add_argument("--sweep", default="BENCH_sweep.json", metavar="PATH",
+                    help="sweep artifact to read (default %(default)s)")
+    ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR,
+                    metavar="DIR",
+                    help="committed baseline directory "
+                    "(default benchmarks/baselines)")
+    ap.add_argument("--diff-out", default=None, metavar="PATH",
+                    help="with --check: write the full gate diff as JSON "
+                    "(the CI trend artifact)")
+    args = ap.parse_args(argv)
+
+    if args.show:
+        baselines = load_baselines(args.baseline_dir)
+        if not baselines:
+            print(f"no baselines under {args.baseline_dir}")
+            return 0
+        for name, doc in baselines.items():
+            m = doc["meta"]
+            print(f"{name}: cpu_count={m.get('cpu_count')} "
+                  f"jax={m.get('jax')} source={m.get('source')} "
+                  f"({len(flatten(doc['record']))} metrics)")
+        return 0
+
+    if args.update:
+        written = update(args.sweep, args.baseline_dir)
+        for path in written:
+            print(f"wrote {os.path.relpath(path)}")
+        return 0
+
+    diff = check(args.sweep, args.baseline_dir)
+    _print_report(diff)
+    if args.diff_out:
+        with open(args.diff_out, "w") as fh:
+            json.dump(diff, fh, indent=2)
+            fh.write("\n")
+        print(f"(diff written to {args.diff_out})")
+    return 1 if diff["failures"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,9 @@
 
 Walks the packages listed in ``TARGETS`` — the serve/core/cache library
 surface plus the benchmark entry points (every ``benchmarks/*.py`` is a
-public artifact producer whose ``run``/helpers CI invokes) — and fails
+public artifact producer whose ``run``/helpers CI invokes) and the
+``tools/`` scripts (CI gates themselves: bench_history, the smoke
+runners, this linter) — and fails
 (exit 1, one line per violation) when a public module, class, function
 or method has no docstring.  "Public" means the name has no leading underscore and the
 object is defined at module or class level — nested helpers and
@@ -23,7 +25,7 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 TARGETS = ("src/repro/serve", "src/repro/core", "src/repro/cache",
-           "src/repro/kernels", "src/repro/obs", "benchmarks")
+           "src/repro/kernels", "src/repro/obs", "benchmarks", "tools")
 
 
 def _missing(tree: ast.Module, path: pathlib.Path):
@@ -51,6 +53,7 @@ def _missing(tree: ast.Module, path: pathlib.Path):
 
 
 def main(argv) -> int:
+    """Lint ``argv`` paths (or ``TARGETS``); return 1 on any violation."""
     roots = [pathlib.Path(a) for a in argv] or [REPO / t for t in TARGETS]
     files = sorted(
         f for root in roots

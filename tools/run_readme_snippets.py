@@ -23,6 +23,7 @@ FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 
 
 def main(argv) -> int:
+    """Run every ```python block in the README; return 1 on failure."""
     readme = pathlib.Path(argv[0]) if argv else REPO / "README.md"
     text = readme.read_text()
     blocks = [m.group(1) for m in FENCE.finditer(text)]
